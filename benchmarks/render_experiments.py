@@ -1,0 +1,89 @@
+"""Fill EXPERIMENTS.md placeholders from results/ (idempotent regeneration)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.launch.roofline import load_cells, pick_hillclimb_cells, render_table
+
+
+def dryrun_section(cells) -> str:
+    n_ok = {m: sum(1 for c in cells if c["status"] == "ok" and c["mesh"] == m)
+            for m in ("single", "multi")}
+    n_skip = {m: sum(1 for c in cells if c["status"] == "skip" and c["mesh"] == m)
+              for m in ("single", "multi")}
+    n_err = {m: sum(1 for c in cells if c["status"] == "error" and c["mesh"] == m)
+             for m in ("single", "multi")}
+    fits = [c for c in cells if c["status"] == "ok" and not c.get("fits_16gb_tpu_est", True)]
+    lines = [
+        f"* 16×16 single-pod (256 chips): **{n_ok['single']} compiled**, "
+        f"{n_skip['single']} skipped (long_500k on full-attention archs), "
+        f"{n_err['single']} errors.",
+        f"* 2×16×16 multi-pod (512 chips): **{n_ok['multi']} compiled**, "
+        f"{n_skip['multi']} skipped, {n_err['multi']} errors.",
+        f"* per-chip fit (TPU-native estimate < 16 GB): "
+        f"{'all compiled cells fit' if not fits else 'over budget: ' + ', '.join(f'{c[chr(39)+chr(39)]}' for c in [])}",
+    ]
+    if fits:
+        lines[-1] = ("* cells over the 16 GB TPU-native estimate: "
+                     + ", ".join(f"{c['arch']}/{c['shape']}/{c['mesh']} "
+                                 f"({c['tpu_memory_estimate_bytes']/1e9:.1f} GB)" for c in fits))
+    # compile-time stats
+    times = [c["wall"]["production_compile_s"] for c in cells if c["status"] == "ok"]
+    if times:
+        lines.append(f"* production-pass compile time: median "
+                     f"{sorted(times)[len(times)//2]:.1f}s, max {max(times):.1f}s "
+                     f"(scan-over-layers keeps HLO O(1) in depth).")
+    return "\n".join(lines)
+
+
+def perf_section() -> str:
+    out = []
+    for p in sorted(Path("results/perf").glob("*.json")):
+        s = json.loads(p.read_text())
+        b, o = s["baseline"], s["best"]
+        out.append(f"### {s['cell']}")
+        out.append("")
+        out.append(f"paper-faithful baseline: compute {b['terms']['compute_s']*1e3:.1f} ms, "
+                   f"memory {b['terms']['memory_s']*1e3:.1f} ms, "
+                   f"collective {b['terms']['collective_s']*1e3:.1f} ms — "
+                   f"bound: **{b['dominant'].replace('_s','')}**, "
+                   f"roofline fraction {b['roofline_fraction']:.4f}, "
+                   f"{b['per_device_bytes']/1e9:.1f} GB/chip")
+        out.append("")
+        out.append(f"beyond-paper best (`{' '.join(o['sets'])}`"
+                   + (f", µbatch={o['microbatches']}" if o.get("microbatches") else "")
+                   + f"): compute {o['terms']['compute_s']*1e3:.1f} ms, "
+                   f"memory {o['terms']['memory_s']*1e3:.1f} ms, "
+                   f"collective {o['terms']['collective_s']*1e3:.1f} ms — "
+                   f"bound: **{o['dominant'].replace('_s','')}**, "
+                   f"roofline fraction {o['roofline_fraction']:.4f} "
+                   f"(**{s['speedup_step_bound']:.2f}× on the step bound**)")
+        out.append("")
+        out.append("| iter | change | hypothesis | outcome |")
+        out.append("|---|---|---|---|")
+        for e in s["log"]:
+            out.append(f"| {e['iter']} | {e['name']} | "
+                       f"{e.get('hypothesis','—')[:90]} | {e.get('outcome','baseline')[:110]} |")
+        out.append("")
+    return "\n".join(out) if out else "_run repro.launch.perf first_"
+
+
+def main() -> None:
+    cells = load_cells()
+    md = Path("EXPERIMENTS.md").read_text()
+    md = md.replace("RESULTS_DRYRUN_PLACEHOLDER", dryrun_section(cells))
+    roof = []
+    for mesh in ("single", "multi"):
+        roof.append(f"### {mesh}-pod mesh ({256 if mesh=='single' else 512} chips)\n")
+        roof.append(render_table(cells, mesh))
+        roof.append("")
+    roof.append("hillclimb cell selection: " + json.dumps(pick_hillclimb_cells(cells)))
+    md = md.replace("RESULTS_ROOFLINE_PLACEHOLDER", "\n".join(roof))
+    md = md.replace("RESULTS_PERF_PLACEHOLDER", perf_section())
+    Path("EXPERIMENTS.md").write_text(md)
+    print("EXPERIMENTS.md rendered")
+
+
+if __name__ == "__main__":
+    main()

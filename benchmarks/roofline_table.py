@@ -1,0 +1,25 @@
+"""Render the §Roofline table from the dry-run sweep results."""
+from __future__ import annotations
+
+from repro.launch.roofline import load_cells, pick_hillclimb_cells, render_table
+
+
+def main() -> None:
+    cells = load_cells()
+    if not cells:
+        print("roofline: no dry-run results yet — run "
+              "`PYTHONPATH=src python -m repro.launch.dryrun --all` first")
+        return
+    for mesh in ("single", "multi"):
+        if any(c.get("mesh") == mesh for c in cells):
+            print(f"\n### {mesh}-pod mesh")
+            print(render_table(cells, mesh))
+    ok = [c for c in cells if c["status"] == "ok" and c.get("mesh") == "single"]
+    if len(ok) >= 3:
+        import json
+
+        print("\nhillclimb cells:", json.dumps(pick_hillclimb_cells(cells)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Benchmark harness entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One module per paper table/figure (fig3/fig4/fig5), plus the framework-side
+benchmarks (kernel autotune, roofline table from the dry-run sweep).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> int:
+    from . import fig3_hashtable, fig4_counters, fig5_spinlock, kernel_autotune, roofline_table
+
+    t0 = time.time()
+    print("=" * 72)
+    print("MLOS-JAX benchmark suite")
+    print("=" * 72)
+    for name, mod in [
+        ("fig3_hashtable", fig3_hashtable),
+        ("fig4_counters", fig4_counters),
+        ("fig5_spinlock", fig5_spinlock),
+        ("kernel_autotune", kernel_autotune),
+        ("roofline_table", roofline_table),
+    ]:
+        print(f"\n--- {name} " + "-" * (60 - len(name)))
+        t = time.time()
+        mod.main()
+        print(f"    [{time.time() - t:.1f}s]")
+    print(f"\ntotal: {time.time() - t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

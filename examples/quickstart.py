@@ -1,0 +1,58 @@
+"""Quickstart: the MLOS loop around a JAX train job, end to end, on one CPU.
+
+Runs a tiny OLMo-family model for 30 steps while an MLOS Agent — a separate
+process connected over the shared-memory channel — live-tunes the ``lr_scale``
+auto-parameter (class-a: a traced scalar, so no recompilation) against the
+training loss telemetry.  This is Figure 1 of the paper with a JAX training
+loop as the "system".
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.configs import get_config
+from repro.core import AgentCore, TuningSession
+from repro.core.tracking import Tracker
+from repro.core.tunable import Float, TunableSpace
+from repro.runtime.steps import TrainHyper
+from repro.runtime.train_loop import run_training
+
+
+def main() -> None:
+    cfg = get_config("olmo-1b").reduced().validate()
+    print(f"model: {cfg.name} (reduced) — {cfg.param_count()/1e6:.2f}M params")
+
+    # A tuning session over the live-updatable lr_scale knob.  For the
+    # quickstart the agent core runs in-process (examples/autotune_kernels.py
+    # shows the full separate-process + shared-memory-channel deployment).
+    space = TunableSpace([Float("lr_scale", 1.0, 0.25, 4.0, log=True)])
+    session = TuningSession.direct("train_loop", space, objective="loss",
+                                   optimizer="bo_matern32", budget=50)
+    agent = AgentCore(session)
+
+    current = {"lr_scale": 1.0}
+    window = []
+
+    def lr_scale_source() -> float:
+        return current["lr_scale"]
+
+    def on_step(step: int, metrics: dict) -> None:
+        window.append(metrics["loss"])
+        if len(window) == 5:  # one "experiment" = 5 steps at the current scale
+            avg = sum(window) / len(window)
+            window.clear()
+            nxt = agent.observe_value(current, avg)
+            current.update(nxt)
+            print(f"  step {step:3d}  avg-loss {avg:.4f}  agent → lr_scale={current['lr_scale']:.3f}")
+
+    out = run_training(cfg, n_steps=30, global_batch=8, seq_len=64,
+                       hyper=TrainHyper(base_lr=3e-3, warmup=5, total=200),
+                       tracker=Tracker("results/runs"), experiment="quickstart",
+                       on_step=on_step, lr_scale_source=lr_scale_source)
+    losses = [h["loss"] for h in out["history"]]
+    print(f"loss: {losses[0]:.3f} → {losses[-1]:.3f} over {len(losses)} steps")
+    print(f"best lr_scale found: {agent.best}")
+
+
+if __name__ == "__main__":
+    main()

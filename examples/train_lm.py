@@ -1,0 +1,75 @@
+"""End-to-end LM training driver.
+
+    PYTHONPATH=src python examples/train_lm.py --preset cpu-smoke
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+    PYTHONPATH=src python examples/train_lm.py --arch mamba2-780m --preset cpu-smoke
+
+Presets:
+  cpu-smoke  reduced config, 20 steps                  (seconds, CI-friendly)
+  100m       ~100M-param config, a few hundred steps   (the assignment's
+             end-to-end driver; sized for a real accelerator — on this 1-core
+             CPU container expect ~1 min/step)
+
+Features exercised: packed synthetic data, AdamW + warmup-cosine, async atomic
+checkpointing with resume, straggler monitor, experiment tracking.
+"""
+import argparse
+import dataclasses
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.core.tracking import Tracker
+from repro.runtime.steps import TrainHyper
+from repro.runtime.train_loop import run_training
+
+
+def preset_config(arch: str, preset: str):
+    cfg = get_config(arch)
+    if preset == "cpu-smoke":
+        return cfg.reduced().validate(), dict(n_steps=20, global_batch=8, seq_len=64)
+    if preset == "100m":
+        # ~100M params in the arch's own family
+        cfg = dataclasses.replace(
+            cfg.reduced(), n_layers=8, d_model=512,
+            n_heads=8 if cfg.n_heads else 0, n_kv_heads=8 if cfg.n_heads else 0,
+            head_dim=64 if cfg.n_heads else 0,
+            d_ff=2048 if cfg.d_ff else 0, vocab_size=32768,
+            moe_d_ff=1024 if cfg.is_moe else 0,
+            moe_num_experts=8 if cfg.is_moe else 0,
+            moe_top_k=2 if cfg.is_moe else 0,
+            ssm_state=64 if cfg.ssm_state else 0, ssm_head_dim=64 if cfg.ssm_state else 64,
+        ).validate()
+        return cfg, dict(n_steps=300, global_batch=16, seq_len=512)
+    raise ValueError(preset)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b", choices=ALL_ARCHS)
+    ap.add_argument("--preset", default="cpu-smoke", choices=["cpu-smoke", "100m"])
+    ap.add_argument("--steps", type=int, default=0, help="override preset step count")
+    ap.add_argument("--ckpt-dir", default="results/ckpt/train_lm")
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg, run_kw = preset_config(args.arch, args.preset)
+    if args.steps:
+        run_kw["n_steps"] = args.steps
+    print(f"training {args.arch} [{args.preset}] — {cfg.param_count()/1e6:.1f}M params, "
+          f"{run_kw['n_steps']} steps × {run_kw['global_batch']}×{run_kw['seq_len']} tokens")
+
+    def on_step(step, m):
+        if step % 10 == 0 or step == run_kw["n_steps"] - 1:
+            print(f"  step {step:4d}  loss {m['loss']:.4f}  |grad| {m['grad_norm']:.2f} "
+                  f" lr {m['lr']:.2e}  {m['step_time_s']*1e3:.0f} ms")
+
+    out = run_training(cfg, hyper=TrainHyper(base_lr=3e-3, warmup=20, total=run_kw["n_steps"]),
+                       microbatches=args.microbatches, ckpt_dir=args.ckpt_dir,
+                       ckpt_every=50, tracker=Tracker(), experiment="train_lm",
+                       on_step=on_step, **run_kw)
+    hist = out["history"]
+    print(f"done: loss {hist[0]['loss']:.3f} → {hist[-1]['loss']:.3f}; "
+          f"checkpoints in {args.ckpt_dir} (re-run to resume)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""repro — MLOS-JAX: automated software performance engineering for a
+multi-pod JAX training/inference framework (reproduction of Curino et al.,
+"MLOS: An Infrastructure for Automated Software Performance Engineering",
+DEEM'20, plus beyond-paper TPU-scale optimization)."""
+
+__version__ = "0.1.0"

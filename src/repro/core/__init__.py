@@ -1,0 +1,32 @@
+"""MLOS core — the paper's contribution as a composable library.
+
+Layers (paper §2.1):
+  tunable/registry  — annotation surface ("auto-parameters")
+  codegen           — externalization artifacts (hooks + binary schemas)
+  channel           — shared-memory telemetry/control rings
+  agent             — side-car daemon hosting optimizers for online tuning
+  telemetry         — app metrics + OS (/proc) + compiled-HLO "HW" counters
+  tracking          — MLflow-like experiment store
+  rpi               — Resource Performance Interfaces (perf-regression gates)
+  optimizers        — RandomSearch / Grid / One-at-a-time / GP-BO (Matern-3/2)
+  smartcomponents   — paper-faithful demo components (hashtable, spinlock)
+"""
+from .agent import AgentClient, AgentCore, AgentProcess, TuningSession
+from .channel import MlosChannel, ShmRing
+from .codegen import generate_source, load_generated, pack_telemetry, unpack_telemetry
+from .registry import MetricSpec, all_components, get_component, tunable_component
+from .rpi import RPI, Bound, RpiReport, assert_rpi
+from .telemetry import Stopwatch, TelemetryEmitter, collective_bytes, hlo_counters, os_counters
+from .tracking import Tracker
+from .tunable import Bool, Categorical, Float, Int, Tunable, TunableSpace
+
+__all__ = [
+    "AgentClient", "AgentCore", "AgentProcess", "TuningSession",
+    "MlosChannel", "ShmRing",
+    "generate_source", "load_generated", "pack_telemetry", "unpack_telemetry",
+    "MetricSpec", "all_components", "get_component", "tunable_component",
+    "RPI", "Bound", "RpiReport", "assert_rpi",
+    "Stopwatch", "TelemetryEmitter", "collective_bytes", "hlo_counters", "os_counters",
+    "Tracker",
+    "Bool", "Categorical", "Float", "Int", "Tunable", "TunableSpace",
+]

@@ -1,0 +1,241 @@
+"""The MLOS Agent — a side-car daemon hosting optimizers/models/rules.
+
+Paper §2.1 steps 4–5: models and optimizations are *deployed into the agent*,
+which performs online inference on live telemetry and sends parameter-update
+commands back over the shared-memory channel; the hooks enact them.
+
+Two drivers share one deterministic core:
+
+  * :class:`AgentCore` — pure logic: consume telemetry, aggregate per-config
+    samples, step the optimizer, produce config-update commands.  Used
+    in-process for tests and for the notebook-style developer loop.
+  * :func:`agent_main` / :class:`AgentProcess` — run the core in a separate
+    OS process attached to the shared-memory channel (the production shape).
+
+Everything the agent needs (schemas, spaces, objective) travels in a
+JSON-serializable :class:`TuningSession`, so the agent process does not import
+the host system's modules — the decoupling the paper insists on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import struct
+import time
+from multiprocessing import Process
+from typing import Any, Dict, List, Optional
+
+from .channel import MlosChannel
+from .optimizers import make_optimizer
+from .registry import ComponentMeta, MetricSpec
+from .tunable import TunableSpace
+
+__all__ = ["TuningSession", "AgentCore", "AgentProcess", "AgentClient"]
+
+_CONTROL_STOP = b"\x00STOP"
+
+
+@dataclasses.dataclass
+class TuningSession:
+    """Everything the agent needs to tune one component instance."""
+
+    component: str
+    component_id: int
+    metric_fmt: str  # struct fmt of telemetry payloads
+    metric_names: List[str]
+    space_json: List[Dict[str, Any]]
+    objective: str
+    mode: str = "min"  # 'min' | 'max'
+    optimizer: str = "bo"
+    samples_per_config: int = 1
+    budget: int = 50
+    seed: int = 0
+
+    @classmethod
+    def for_component(cls, meta: ComponentMeta, objective: str, **kw: Any) -> "TuningSession":
+        fmt = "<II" + "".join(m.fmt for m in meta.metrics)
+        return cls(
+            component=meta.name,
+            component_id=meta.component_id,
+            metric_fmt=fmt,
+            metric_names=[m.name for m in meta.metrics],
+            space_json=meta.space.to_json(),
+            objective=objective,
+            **kw,
+        )
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self))
+
+    @classmethod
+    def from_json(cls, s: str) -> "TuningSession":
+        return cls(**json.loads(s))
+
+    @classmethod
+    def direct(cls, name: str, space: "TunableSpace", objective: str, **kw: Any) -> "TuningSession":
+        """Session for in-process tuning (no channel / packed telemetry):
+        used with :meth:`AgentCore.observe_value`."""
+        return cls(component=name, component_id=0, metric_fmt="", metric_names=[objective],
+                   space_json=space.to_json(), objective=objective, **kw)
+
+
+class AgentCore:
+    """Deterministic agent logic: telemetry in, config-update commands out."""
+
+    def __init__(self, session: TuningSession):
+        self.session = session
+        self.space = TunableSpace.from_json(session.space_json)
+        self.opt = make_optimizer(session.optimizer, self.space, seed=session.seed)
+        self._pending_cfg: Optional[Dict[str, Any]] = None
+        self._samples: List[float] = []
+        self.evaluations = 0
+        self.done = False
+
+    # -- protocol ------------------------------------------------------------
+    def start_command(self) -> bytes:
+        """First command: put the system on the optimizer's first proposal."""
+        self._pending_cfg = self.opt.ask()
+        return self._command(self._pending_cfg)
+
+    def _command(self, cfg: Dict[str, Any]) -> bytes:
+        msg = {"type": "config_update", "component": self.session.component, "settings": cfg}
+        return json.dumps(msg).encode()
+
+    def observe(self, payload: bytes) -> Optional[bytes]:
+        """Feed one telemetry record; maybe emit the next config-update."""
+        if self.done or self._pending_cfg is None:
+            return None
+        vals = struct.unpack(self.session.metric_fmt, payload)
+        if vals[0] != self.session.component_id:
+            return None  # not ours
+        metrics = dict(zip(self.session.metric_names, vals[2:]))
+        v = float(metrics[self.session.objective])
+        if self.session.mode == "max":
+            v = -v
+        self._samples.append(v)
+        if len(self._samples) < self.session.samples_per_config:
+            return None
+        value = sum(self._samples) / len(self._samples)
+        self._samples = []
+        self.opt.tell(self._pending_cfg, value)
+        self.evaluations += 1
+        if self.evaluations >= self.session.budget:
+            self.done = True
+            best = self.opt.best
+            assert best is not None
+            self._pending_cfg = None
+            return self._command(best.config)  # park system on the best config
+        self._pending_cfg = self.opt.ask()
+        return self._command(self._pending_cfg)
+
+    # -- in-process variant (no channel) --------------------------------------
+    def ask(self) -> Dict[str, Any]:
+        if self._pending_cfg is None and not self.done:
+            self._pending_cfg = self.opt.ask()
+        return dict(self._pending_cfg or (self.opt.best.config if self.opt.best else {}))
+
+    def observe_value(self, config: Dict[str, Any], value: float) -> Dict[str, Any]:
+        """Direct observation (bypasses the packed-telemetry protocol);
+        returns the next configuration to run."""
+        if self.done:
+            return self.ask()
+        v = -float(value) if self.session.mode == "max" else float(value)
+        self.opt.tell(config, v)
+        self.evaluations += 1
+        if self.evaluations >= self.session.budget:
+            self.done = True
+            self._pending_cfg = None
+            return dict(self.opt.best.config)
+        self._pending_cfg = self.opt.ask()
+        return dict(self._pending_cfg)
+
+    @property
+    def best(self):
+        return self.opt.best
+
+
+def agent_main(telemetry_name: str, control_name: str, session_json: str, poll_s: float = 0.0005) -> None:
+    """Entry point of the agent process."""
+    chan = MlosChannel.attach(telemetry_name, control_name)
+    core = AgentCore(TuningSession.from_json(session_json))
+    chan.control.push(core.start_command())
+    try:
+        while not core.done:
+            payload = chan.telemetry.pop()
+            if payload is None:
+                time.sleep(poll_s)
+                continue
+            if payload == _CONTROL_STOP:
+                break
+            cmd = core.observe(payload)
+            if cmd is not None:
+                chan.control.push(cmd)
+        # Final report for the host (best config + value) as a control message.
+        if core.best is not None:
+            chan.control.push(
+                json.dumps(
+                    {
+                        "type": "session_report",
+                        "component": core.session.component,
+                        "best_config": core.best.config,
+                        "best_value": core.best.value,
+                        "evaluations": core.evaluations,
+                    }
+                ).encode()
+            )
+    finally:
+        chan.telemetry.close()
+        chan.control.close()
+
+
+class AgentProcess:
+    """Host-side handle that launches/stops the agent daemon."""
+
+    def __init__(self, channel: MlosChannel, session: TuningSession):
+        self.channel = channel
+        self.session = session
+        tele, ctrl = channel.names
+        self.proc = Process(target=agent_main, args=(tele, ctrl, session.to_json()), daemon=True)
+
+    def start(self) -> "AgentProcess":
+        self.proc.start()
+        return self
+
+    def stop(self, timeout: float = 5.0) -> None:
+        self.channel.telemetry.push(_CONTROL_STOP)
+        self.proc.join(timeout)
+        if self.proc.is_alive():  # pragma: no cover
+            self.proc.terminate()
+            self.proc.join(timeout)
+
+
+class AgentClient:
+    """System-side: applies agent commands to live component instances."""
+
+    def __init__(self, channel: MlosChannel):
+        self.channel = channel
+        self._instances: Dict[str, Any] = {}
+        self.reports: List[Dict[str, Any]] = []
+
+    def register(self, name: str, instance: Any) -> None:
+        self._instances[name] = instance
+
+    def poll(self, wait_s: float = 0.0, deadline_s: float = 1.0) -> int:
+        """Apply pending config updates; optionally block until one arrives."""
+        applied = 0
+        t0 = time.perf_counter()
+        while True:
+            payload = self.channel.control.pop()
+            if payload is None:
+                if wait_s and applied == 0 and time.perf_counter() - t0 < deadline_s:
+                    time.sleep(wait_s)
+                    continue
+                return applied
+            msg = json.loads(payload.decode())
+            if msg["type"] == "config_update":
+                inst = self._instances.get(msg["component"])
+                if inst is not None:
+                    inst.apply_settings(msg["settings"])
+                    applied += 1
+            elif msg["type"] == "session_report":
+                self.reports.append(msg)

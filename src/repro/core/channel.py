@@ -1,0 +1,167 @@
+"""Low-latency shared-memory channel between the system and the MLOS agent.
+
+A single-producer / single-consumer byte ring over
+``multiprocessing.shared_memory`` — the paper's "low latency shared memory
+communication channel" (§2.1 step 1b).  Two rings form a duplex
+:class:`MlosChannel`: telemetry flows system→agent, config updates agent→system.
+
+Layout of one ring (little-endian):
+
+    [0:8)   head  — total bytes ever written (producer-owned)
+    [8:16)  tail  — total bytes ever read    (consumer-owned)
+    [16:..) data  — power-of-two circular buffer
+
+Records are ``[u32 length][payload]``; a length of 0xFFFFFFFF is a wrap marker
+(skip to next buffer start).  Head/tail are monotonically increasing u64s so
+the full/empty distinction is trivial and a torn read can only under-estimate
+available space/data (safe for SPSC on CPython, whose byte-slice stores are
+performed under the GIL / process memory-ordering on x86).
+"""
+from __future__ import annotations
+
+import struct
+from multiprocessing import shared_memory
+from typing import List, Optional
+
+__all__ = ["ShmRing", "MlosChannel"]
+
+_U64 = struct.Struct("<Q")
+_U32 = struct.Struct("<I")
+_WRAP = 0xFFFFFFFF
+_HDR = 16
+
+
+class ShmRing:
+    """SPSC byte ring over POSIX shared memory."""
+
+    def __init__(self, name: Optional[str] = None, capacity: int = 1 << 20, create: bool = True):
+        if capacity & (capacity - 1):
+            raise ValueError("capacity must be a power of two")
+        self.capacity = capacity
+        if create:
+            self._shm = shared_memory.SharedMemory(name=name, create=True, size=_HDR + capacity)
+            self._shm.buf[:_HDR] = b"\x00" * _HDR
+        else:
+            self._shm = shared_memory.SharedMemory(name=name, create=False)
+            self.capacity = self._shm.size - _HDR
+        self.name = self._shm.name
+        self._buf = self._shm.buf
+
+    # -- counters -----------------------------------------------------------
+    @property
+    def head(self) -> int:
+        return _U64.unpack_from(self._buf, 0)[0]
+
+    @head.setter
+    def head(self, v: int) -> None:
+        _U64.pack_into(self._buf, 0, v)
+
+    @property
+    def tail(self) -> int:
+        return _U64.unpack_from(self._buf, 8)[0]
+
+    @tail.setter
+    def tail(self, v: int) -> None:
+        _U64.pack_into(self._buf, 8, v)
+
+    # -- producer -----------------------------------------------------------
+    def push(self, payload: bytes) -> bool:
+        """Append one record; returns False (drops) if the ring is full.
+
+        Dropping telemetry under pressure (rather than blocking the system's
+        inner loop) is the paper's explicit design choice.
+        """
+        n = len(payload)
+        need = 4 + n
+        if need > self.capacity // 2:
+            raise ValueError("payload too large for ring")
+        head, tail = self.head, self.tail
+        free = self.capacity - (head - tail)
+        pos = head % self.capacity
+        tail_room = self.capacity - pos
+        if tail_room < 4:
+            # Cannot even fit a wrap marker header cleanly; pad to boundary.
+            if free < tail_room + need:
+                return False
+            # zero-fill unusable tail; consumer skips by same rule
+            head += tail_room
+            pos = 0
+        elif tail_room < need:
+            if free < tail_room + need:
+                return False
+            _U32.pack_into(self._buf, _HDR + pos, _WRAP)
+            head += tail_room
+            pos = 0
+        elif free < need:
+            return False
+        self._buf[_HDR + pos + 4 : _HDR + pos + 4 + n] = payload
+        _U32.pack_into(self._buf, _HDR + pos, n)
+        self.head = head + need  # publish
+        return True
+
+    # -- consumer -----------------------------------------------------------
+    def pop(self) -> Optional[bytes]:
+        head, tail = self.head, self.tail
+        while True:
+            if head == tail:
+                return None
+            pos = tail % self.capacity
+            tail_room = self.capacity - pos
+            if tail_room < 4:
+                tail += tail_room
+                continue
+            (n,) = _U32.unpack_from(self._buf, _HDR + pos)
+            if n == _WRAP:
+                tail += tail_room
+                continue
+            payload = bytes(self._buf[_HDR + pos + 4 : _HDR + pos + 4 + n])
+            self.tail = tail + 4 + n
+            return payload
+
+    def drain(self, limit: int = 1 << 30) -> List[bytes]:
+        out: List[bytes] = []
+        while len(out) < limit:
+            p = self.pop()
+            if p is None:
+                break
+            out.append(p)
+        return out
+
+    # -- lifecycle ----------------------------------------------------------
+    def close(self) -> None:
+        self._buf = None  # release memoryview before closing (CPython requirement)
+        self._shm.close()
+
+    def unlink(self) -> None:
+        try:
+            self._shm.unlink()
+        except FileNotFoundError:
+            pass
+
+
+class MlosChannel:
+    """Duplex channel: telemetry ring (system→agent) + control ring (agent→system)."""
+
+    def __init__(self, telemetry: ShmRing, control: ShmRing, owner: bool):
+        self.telemetry = telemetry
+        self.control = control
+        self._owner = owner
+
+    @classmethod
+    def create(cls, capacity: int = 1 << 20) -> "MlosChannel":
+        return cls(ShmRing(capacity=capacity), ShmRing(capacity=capacity), owner=True)
+
+    @classmethod
+    def attach(cls, telemetry_name: str, control_name: str) -> "MlosChannel":
+        return cls(ShmRing(telemetry_name, create=False), ShmRing(control_name, create=False), owner=False)
+
+    @property
+    def names(self):
+        return (self.telemetry.name, self.control.name)
+
+    def close(self) -> None:
+        self.telemetry.close()
+        self.control.close()
+        if self._owner:
+            self.telemetry.unlink()
+            self.control.unlink()

@@ -1,0 +1,28 @@
+from .base import Observation, Optimizer, optimize
+from .bayesopt import BayesOpt
+from .gaussian_process import GP, KERNELS
+from .grid_search import GridSearch
+from .random_search import OneAtATime, RandomSearch
+
+__all__ = [
+    "Observation", "Optimizer", "optimize",
+    "BayesOpt", "GP", "KERNELS", "GridSearch", "OneAtATime", "RandomSearch",
+    "make_optimizer",
+]
+
+
+def make_optimizer(name: str, space, seed: int = 0, **kw):
+    name = name.lower()
+    if name in ("rs", "random", "random_search"):
+        return RandomSearch(space, seed, **kw)
+    if name in ("grid", "grid_search"):
+        return GridSearch(space, seed, **kw)
+    if name in ("oaat", "one_at_a_time"):
+        return OneAtATime(space, seed, **kw)
+    if name in ("bo", "bayesopt", "gp"):
+        return BayesOpt(space, seed, **kw)
+    if name in ("bo_rbf",):
+        return BayesOpt(space, seed, kernel="rbf", **kw)
+    if name in ("bo_matern32", "bo_matern"):
+        return BayesOpt(space, seed, kernel="matern32", **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

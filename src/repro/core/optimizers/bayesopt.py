@@ -1,0 +1,62 @@
+"""Bayesian Optimization over a TunableSpace (GP surrogate + EI/UCB).
+
+Minimization convention.  The space is embedded into [0,1]^d via
+``TunableSpace.encode``; candidates are a random pool plus local
+perturbations of the incumbent, scored by the acquisition function.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import numpy as np
+from scipy.stats import norm
+
+from ..tunable import TunableSpace
+from .base import Optimizer
+from .gaussian_process import GP
+
+__all__ = ["BayesOpt"]
+
+
+class BayesOpt(Optimizer):
+    def __init__(
+        self,
+        space: TunableSpace,
+        seed: int = 0,
+        kernel: str = "matern32",
+        acquisition: str = "ei",
+        n_init: int = 5,
+        n_candidates: int = 1024,
+        ucb_beta: float = 2.0,
+    ):
+        super().__init__(space, seed)
+        self.kernel = kernel
+        self.acquisition = acquisition
+        self.n_init = n_init
+        self.n_candidates = n_candidates
+        self.ucb_beta = ucb_beta
+
+    def _acq(self, mu: np.ndarray, sd: np.ndarray, best: float) -> np.ndarray:
+        if self.acquisition == "ucb":  # lower-confidence bound for minimization
+            return -(mu - self.ucb_beta * sd)
+        imp = best - mu
+        z = imp / np.maximum(sd, 1e-12)
+        ei = imp * norm.cdf(z) + sd * norm.pdf(z)
+        return np.where(sd > 1e-12, ei, 0.0)
+
+    def _ask(self) -> Dict[str, Any]:
+        if len(self.history) < self.n_init:
+            return self.space.sample(self.rng)
+        X = np.stack([self.space.encode(o.config) for o in self.history])
+        y = np.array([o.value for o in self.history])
+        # De-duplicate identical encodings (categoricals collapse) for stability.
+        gp = GP(kernel=self.kernel).fit(X, y)
+        d = X.shape[1]
+        pool = self.rng.random((self.n_candidates, d))
+        inc = X[int(np.argmin(y))]
+        local = np.clip(inc[None, :] + 0.08 * self.rng.standard_normal((self.n_candidates // 4, d)), 0, 1)
+        cand = np.concatenate([pool, local], axis=0)
+        mu, sd = gp.predict(cand)
+        score = self._acq(mu, sd, float(y.min()))
+        return self.space.decode(cand[int(np.argmax(score))])

@@ -1,0 +1,116 @@
+"""Smart-component registry — the annotation surface of MLOS.
+
+``@tunable_component`` is the Python analogue of the paper's C# attributes on
+C++ constants: it *declares* which parameters of a class are tunable and which
+metrics it emits, and registers the component so that :mod:`repro.core.codegen`
+can generate the externalization artifacts (hooks + message schemas) and the
+agent can address it over the channel.
+
+The decorated class itself is untouched except for:
+  * ``cls.mlos_meta``  — the ComponentMeta
+  * instance ``self.settings`` — a plain dict seeded with tunable defaults
+    (merged with constructor overrides), i.e. the *hooked* constants.
+
+Keeping ``settings`` a flat dict of scalars is deliberate: the generated hooks
+swap values without entering the component's inner loop (the paper's
+"performance Socratic oath").
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Type
+
+from .tunable import Tunable, TunableSpace
+
+__all__ = ["MetricSpec", "ComponentMeta", "tunable_component", "get_component", "all_components", "clear_registry"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricSpec:
+    """One metric a component emits. ``fmt`` is the struct char used by codegen."""
+
+    name: str
+    fmt: str = "d"  # 'd' float64, 'q' int64
+    description: str = ""
+
+    def __post_init__(self) -> None:
+        if self.fmt not in ("d", "q"):
+            raise ValueError(f"metric {self.name}: fmt must be 'd' or 'q'")
+
+
+@dataclasses.dataclass(frozen=True)
+class ComponentMeta:
+    name: str
+    component_id: int
+    space: TunableSpace
+    metrics: Tuple[MetricSpec, ...]
+    cls_qualname: str = ""
+
+
+_REGISTRY: Dict[str, ComponentMeta] = {}
+_BY_ID: Dict[int, ComponentMeta] = {}
+
+
+def _next_id() -> int:
+    return 1 + max([m.component_id for m in _REGISTRY.values()], default=0)
+
+
+def tunable_component(
+    name: Optional[str] = None,
+    tunables: Sequence[Tunable] = (),
+    metrics: Sequence[MetricSpec] = (),
+) -> Callable[[Type], Type]:
+    """Class decorator declaring a smart component (see module docstring)."""
+
+    space = TunableSpace(list(tunables))
+    metric_tuple = tuple(metrics)
+
+    def wrap(cls: Type) -> Type:
+        comp_name = name or cls.__name__
+        if comp_name in _REGISTRY:
+            # Re-registration (e.g. module reload) replaces the entry but keeps the id.
+            cid = _REGISTRY[comp_name].component_id
+        else:
+            cid = _next_id()
+        meta = ComponentMeta(comp_name, cid, space, metric_tuple, cls.__qualname__)
+        _REGISTRY[comp_name] = meta
+        _BY_ID[cid] = meta
+        cls.mlos_meta = meta
+
+        orig_init = cls.__init__
+
+        @functools.wraps(orig_init)
+        def __init__(self, *args: Any, **kwargs: Any) -> None:
+            overrides = {k: kwargs.pop(k) for k in list(kwargs) if k in space}
+            self.settings = space.validate(overrides)
+            orig_init(self, *args, **kwargs)
+
+        cls.__init__ = __init__
+
+        def apply_settings(self, updates: Dict[str, Any]) -> None:
+            """External hook: swap tunable values (agent-driven)."""
+            merged = dict(self.settings)
+            merged.update(updates)
+            self.settings = space.validate(merged)
+
+        cls.apply_settings = apply_settings
+        return cls
+
+    return wrap
+
+
+def get_component(name_or_id: Any) -> ComponentMeta:
+    if isinstance(name_or_id, int):
+        return _BY_ID[name_or_id]
+    return _REGISTRY[name_or_id]
+
+
+def all_components() -> List[ComponentMeta]:
+    return list(_REGISTRY.values())
+
+
+def clear_registry() -> None:
+    """Test helper."""
+    _REGISTRY.clear()
+    _BY_ID.clear()

@@ -1,0 +1,110 @@
+"""Resource Performance Interfaces (RPI) — the SPE analogue of an API.
+
+An RPI declares the acceptable resource/performance *envelope* of a component
+under a named workload.  Crucially (per the paper) the RPI lives in the DS
+experience, NOT in system code: the same component may carry different RPIs
+in different usage contexts.  RPIs ground component-level performance
+regression testing — ``assert_rpi`` is used directly from pytest, and
+envelopes can be *learned* from tracked runs (``RPI.learn``).
+"""
+from __future__ import annotations
+
+import json
+import math
+from dataclasses import dataclass, field, asdict
+from pathlib import Path
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+from .tracking import Tracker
+
+__all__ = ["Bound", "RPI", "RpiReport", "assert_rpi"]
+
+
+@dataclass(frozen=True)
+class Bound:
+    metric: str
+    low: float = -math.inf
+    high: float = math.inf
+
+    def check(self, value: float) -> bool:
+        return self.low <= value <= self.high
+
+
+@dataclass
+class RpiReport:
+    ok: bool
+    violations: List[str] = field(default_factory=list)
+    checked: int = 0
+
+    def __bool__(self) -> bool:
+        return self.ok
+
+
+@dataclass
+class RPI:
+    component: str
+    workload: str
+    bounds: Tuple[Bound, ...] = ()
+
+    def check(self, metrics: Dict[str, float]) -> RpiReport:
+        violations: List[str] = []
+        checked = 0
+        for b in self.bounds:
+            if b.metric not in metrics:
+                violations.append(f"{b.metric}: missing from measurement")
+                continue
+            checked += 1
+            v = float(metrics[b.metric])
+            if not b.check(v):
+                violations.append(f"{b.metric}: {v:.6g} outside [{b.low:.6g}, {b.high:.6g}]")
+        return RpiReport(ok=not violations, violations=violations, checked=checked)
+
+    # -- persistence ---------------------------------------------------------
+    def save(self, root: str = "results/rpi") -> Path:
+        d = Path(root)
+        d.mkdir(parents=True, exist_ok=True)
+        p = d / f"{self.component}.{self.workload}.json"
+        p.write_text(json.dumps(asdict(self), indent=1))
+        return p
+
+    @staticmethod
+    def load(component: str, workload: str, root: str = "results/rpi") -> "RPI":
+        p = Path(root) / f"{component}.{workload}.json"
+        raw = json.loads(p.read_text())
+        return RPI(raw["component"], raw["workload"], tuple(Bound(**b) for b in raw["bounds"]))
+
+    # -- learning envelopes from tracked runs ("learned from build-test runs")
+    @staticmethod
+    def learn(
+        component: str,
+        workload: str,
+        tracker: Tracker,
+        experiment: str,
+        metrics: Iterable[str],
+        slack: float = 0.25,
+    ) -> "RPI":
+        """Derive bounds from historical runs: [min·(1-slack), max·(1+slack)]."""
+        lows: Dict[str, float] = {}
+        highs: Dict[str, float] = {}
+        for rec in tracker.runs(experiment):
+            for m in metrics:
+                hist = rec.metrics.get(m)
+                if not hist:
+                    continue
+                vals = [h["value"] for h in hist]
+                lows[m] = min(lows.get(m, math.inf), min(vals))
+                highs[m] = max(highs.get(m, -math.inf), max(vals))
+        bounds = []
+        for m in metrics:
+            if m not in lows:
+                continue
+            lo, hi = lows[m], highs[m]
+            span = max(abs(lo), abs(hi), 1e-12)
+            bounds.append(Bound(m, lo - slack * span, hi + slack * span))
+        return RPI(component, workload, tuple(bounds))
+
+
+def assert_rpi(rpi: RPI, metrics: Dict[str, float]) -> None:
+    rep = rpi.check(metrics)
+    if not rep:
+        raise AssertionError(f"RPI {rpi.component}/{rpi.workload} violated: {rep.violations}")

@@ -1,0 +1,201 @@
+"""Tunable parameters ("auto-parameters" in MLOS terms) and search spaces.
+
+The paper declares system constants tunable via language-native annotations
+(C# attributes over C++ constants).  The Python idiom here is a declarative
+``Tunable`` descriptor plus a ``TunableSpace`` that supports:
+
+  * sampling (Random Search),
+  * enumeration (Grid Search),
+  * a continuous [0,1]^d embedding (Bayesian Optimization over GP),
+
+so every optimizer in :mod:`repro.core.optimizers` works over any component.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["Tunable", "TunableSpace", "Int", "Float", "Categorical", "Bool"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Tunable:
+    """One tunable parameter: type, domain and default.
+
+    kind:
+      - "int":   integer in [low, high]; optionally log-scaled
+      - "float": float in [low, high]; optionally log-scaled
+      - "categorical": one of ``choices`` (any hashable values)
+    """
+
+    name: str
+    kind: str
+    default: Any
+    low: Optional[float] = None
+    high: Optional[float] = None
+    log: bool = False
+    choices: Optional[Tuple[Any, ...]] = None
+    description: str = ""
+
+    def __post_init__(self) -> None:
+        if self.kind not in ("int", "float", "categorical"):
+            raise ValueError(f"unknown tunable kind {self.kind!r}")
+        if self.kind == "categorical":
+            if not self.choices:
+                raise ValueError(f"{self.name}: categorical needs choices")
+            if self.default not in self.choices:
+                raise ValueError(f"{self.name}: default {self.default!r} not in choices")
+        else:
+            if self.low is None or self.high is None or self.low > self.high:
+                raise ValueError(f"{self.name}: bad range [{self.low}, {self.high}]")
+            if self.log and self.low <= 0:
+                raise ValueError(f"{self.name}: log scale requires low > 0")
+            if not (self.low <= self.default <= self.high):
+                raise ValueError(f"{self.name}: default {self.default} outside range")
+
+    # ------------------------------------------------------------------ sampling
+    def sample(self, rng: np.random.Generator) -> Any:
+        if self.kind == "categorical":
+            return self.choices[int(rng.integers(len(self.choices)))]
+        return self.decode(float(rng.random()))
+
+    def grid(self, n: int = 8) -> List[Any]:
+        """Up-to-n representative values spanning the domain."""
+        if self.kind == "categorical":
+            return list(self.choices)
+        us = np.linspace(0.0, 1.0, n)
+        vals: List[Any] = []
+        for u in us:
+            v = self.decode(float(u))
+            if v not in vals:
+                vals.append(v)
+        return vals
+
+    # ------------------------------------------------------ [0,1] unit embedding
+    def encode(self, value: Any) -> float:
+        """Map a concrete value into [0,1] (for the GP surrogate)."""
+        if self.kind == "categorical":
+            i = self.choices.index(value)
+            return (i + 0.5) / len(self.choices)
+        lo, hi = float(self.low), float(self.high)
+        if self.log:
+            lo, hi, value = math.log(lo), math.log(hi), math.log(float(value))
+        if hi == lo:
+            return 0.5
+        return min(1.0, max(0.0, (float(value) - lo) / (hi - lo)))
+
+    def decode(self, u: float) -> Any:
+        """Map a point of [0,1] back into the domain (inverse of encode)."""
+        u = min(1.0, max(0.0, float(u)))
+        if self.kind == "categorical":
+            i = min(len(self.choices) - 1, int(u * len(self.choices)))
+            return self.choices[i]
+        lo, hi = float(self.low), float(self.high)
+        if self.log:
+            v = math.exp(math.log(lo) + u * (math.log(hi) - math.log(lo)))
+        else:
+            v = lo + u * (hi - lo)
+        if self.kind == "int":
+            return int(min(self.high, max(self.low, round(v))))
+        return float(v)
+
+    def validate(self, value: Any) -> Any:
+        if self.kind == "categorical":
+            if value not in self.choices:
+                raise ValueError(f"{self.name}: {value!r} not in {self.choices}")
+            return value
+        v = float(value)
+        if not (self.low <= v <= self.high):
+            raise ValueError(f"{self.name}: {v} outside [{self.low}, {self.high}]")
+        return int(round(v)) if self.kind == "int" else v
+
+
+# Convenience constructors -------------------------------------------------------
+def Int(name: str, default: int, low: int, high: int, log: bool = False, description: str = "") -> Tunable:
+    return Tunable(name, "int", default, low=low, high=high, log=log, description=description)
+
+
+def Float(name: str, default: float, low: float, high: float, log: bool = False, description: str = "") -> Tunable:
+    return Tunable(name, "float", default, low=low, high=high, log=log, description=description)
+
+
+def Categorical(name: str, default: Any, choices: Sequence[Any], description: str = "") -> Tunable:
+    return Tunable(name, "categorical", default, choices=tuple(choices), description=description)
+
+
+def Bool(name: str, default: bool, description: str = "") -> Tunable:
+    return Categorical(name, default, (False, True), description=description)
+
+
+class TunableSpace:
+    """An ordered collection of Tunables — the component's search space."""
+
+    def __init__(self, tunables: Sequence[Tunable]):
+        names = [t.name for t in tunables]
+        if len(set(names)) != len(names):
+            raise ValueError("duplicate tunable names")
+        self._tunables: Dict[str, Tunable] = {t.name: t for t in tunables}
+
+    # mapping-ish API
+    def __iter__(self) -> Iterator[Tunable]:
+        return iter(self._tunables.values())
+
+    def __len__(self) -> int:
+        return len(self._tunables)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._tunables
+
+    def __getitem__(self, name: str) -> Tunable:
+        return self._tunables[name]
+
+    @property
+    def names(self) -> List[str]:
+        return list(self._tunables)
+
+    def defaults(self) -> Dict[str, Any]:
+        return {t.name: t.default for t in self}
+
+    def validate(self, config: Dict[str, Any]) -> Dict[str, Any]:
+        unknown = set(config) - set(self._tunables)
+        if unknown:
+            raise ValueError(f"unknown tunables {sorted(unknown)}")
+        out = self.defaults()
+        for k, v in config.items():
+            out[k] = self._tunables[k].validate(v)
+        return out
+
+    def subset(self, names: Sequence[str]) -> "TunableSpace":
+        return TunableSpace([self._tunables[n] for n in names])
+
+    # optimizer-facing API
+    def sample(self, rng: np.random.Generator) -> Dict[str, Any]:
+        return {t.name: t.sample(rng) for t in self}
+
+    def grid(self, per_dim: int = 8) -> List[Dict[str, Any]]:
+        configs: List[Dict[str, Any]] = [{}]
+        for t in self:
+            configs = [dict(c, **{t.name: v}) for c in configs for v in t.grid(per_dim)]
+        return configs
+
+    def encode(self, config: Dict[str, Any]) -> np.ndarray:
+        return np.array([t.encode(config[t.name]) for t in self], dtype=np.float64)
+
+    def decode(self, x: np.ndarray) -> Dict[str, Any]:
+        return {t.name: t.decode(float(u)) for t, u in zip(self, np.asarray(x, dtype=np.float64))}
+
+    def to_json(self) -> List[Dict[str, Any]]:
+        return [dataclasses.asdict(t) for t in self]
+
+    @staticmethod
+    def from_json(items: List[Dict[str, Any]]) -> "TunableSpace":
+        ts = []
+        for it in items:
+            it = dict(it)
+            if it.get("choices") is not None:
+                it["choices"] = tuple(it["choices"])
+            ts.append(Tunable(**it))
+        return TunableSpace(ts)

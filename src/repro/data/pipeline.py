@@ -1,0 +1,84 @@
+"""Deterministic synthetic data pipeline: corpus → packing → sharded batches.
+
+Built to the same contract a real corpus loader would satisfy:
+  * deterministic given (seed, step) — resumable from a checkpointed step
+    with zero drift (the batch at step k is a pure function of (seed, k));
+  * document packing: variable-length "documents" are packed into fixed
+    seq_len windows with -1 label masking across document boundaries;
+  * shard-aware: each host slices its own rows of the global batch
+    (``host_slice``), matching the dry-run's batch sharding.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["SyntheticCorpus", "PackedBatcher"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticCorpus:
+    """Zipfian token "documents" with deterministic per-doc RNG."""
+
+    vocab_size: int
+    seed: int = 0
+    mean_len: int = 512
+
+    def document(self, doc_id: int) -> np.ndarray:
+        rng = np.random.default_rng(np.random.SeedSequence([self.seed, doc_id]))
+        n = max(8, int(rng.exponential(self.mean_len)))
+        # Zipf-ish over the vocab, clipped; 0 reserved as BOS
+        toks = rng.zipf(1.3, size=n).astype(np.int64)
+        toks = np.clip(toks, 1, self.vocab_size - 1).astype(np.int32)
+        toks[0] = 0
+        return toks
+
+
+class PackedBatcher:
+    """Packs documents into (tokens, labels) windows of ``seq_len``.
+
+    labels[i] = tokens[i+1] within a document; -1 at document boundaries and
+    padding.  ``batch_at(step)`` is stateless — the resume contract.
+    """
+
+    def __init__(self, corpus: SyntheticCorpus, global_batch: int, seq_len: int,
+                 host_slice: Optional[Tuple[int, int]] = None):
+        self.corpus = corpus
+        self.global_batch = global_batch
+        self.seq_len = seq_len
+        lo, hi = host_slice or (0, global_batch)
+        assert 0 <= lo < hi <= global_batch
+        self.host_lo, self.host_hi = lo, hi
+
+    def _row(self, row_id: int) -> Tuple[np.ndarray, np.ndarray]:
+        s = self.seq_len
+        toks = np.full((s,), 0, np.int32)
+        labs = np.full((s,), -1, np.int32)
+        pos = 0
+        doc_id = row_id * 131071  # disjoint doc streams per row
+        while pos < s:
+            doc = self.corpus.document(doc_id)
+            doc_id += 1
+            take = min(len(doc), s - pos)
+            toks[pos : pos + take] = doc[:take]
+            if take > 1:
+                labs[pos : pos + take - 1] = doc[1:take]
+            pos += take
+        return toks, labs
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        rows = range(self.host_lo, self.host_hi)
+        n = len(rows)
+        toks = np.empty((n, self.seq_len), np.int32)
+        labs = np.empty((n, self.seq_len), np.int32)
+        for i, r in enumerate(rows):
+            toks[i], labs[i] = self._row(step * self.global_batch + r)
+        return {"tokens": toks, "labels": labs}
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1

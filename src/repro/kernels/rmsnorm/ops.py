@@ -1,0 +1,41 @@
+"""Public fused-RMSNorm op with MLOS-tunable impl/block_rows."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from ...core.registry import MetricSpec, tunable_component
+from ...core.tunable import Categorical, Int
+from . import ref
+
+__all__ = ["rmsnorm", "rmsnorm_settings", "RmsNormSettings"]
+
+
+@tunable_component(
+    name="rmsnorm_kernel",
+    tunables=(
+        Categorical("impl", default="jnp", choices=("jnp", "pallas")),
+        Int("block_rows", default=256, low=8, high=4096, log=True,
+            description="rows normalized per VMEM tile"),
+    ),
+    metrics=(MetricSpec("time_us", "d"),),
+)
+class RmsNormSettings:
+    pass
+
+
+rmsnorm_settings = RmsNormSettings()
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, residual: Optional[jax.Array] = None,
+            eps: float = 1e-5, *, impl: Optional[str] = None,
+            block_rows: Optional[int] = None) -> jax.Array:
+    s = rmsnorm_settings.settings
+    impl = impl or s["impl"]
+    if impl == "jnp":
+        return ref.rmsnorm(x, scale, residual, eps)
+    from . import kernel
+
+    return kernel.rmsnorm_pallas(x, scale, residual, eps,
+                                 block_rows=block_rows or s["block_rows"])

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for fused RMSNorm (+ optional residual add)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rmsnorm"]
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, residual: Optional[jax.Array] = None,
+            eps: float = 1e-5) -> jax.Array:
+    """y = rmsnorm(x + residual) * scale, computed in fp32, cast back."""
+    xf = x.astype(jnp.float32)
+    if residual is not None:
+        xf = xf + residual.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,147 @@
+"""Pure-jnp oracles for the Mamba-2 SSD (state-space duality) primitive.
+
+The SSD recurrence (per head h, head-dim p, state-dim n):
+
+    h_t = exp(A * dt_t) * h_{t-1} + dt_t * B_t ⊗ x_t       (state: p × n)
+    y_t = C_t · h_t + D * x_t
+
+Implementations:
+  * :func:`ssd_naive_scan`   — lax.scan over time; exact oracle (small S).
+  * :func:`ssd_chunked`      — the paper's block decomposition: quadratic
+    intra-chunk attention-like term + inter-chunk state recurrence.  This is
+    the model's production path and the Pallas kernel's numerical target.
+  * :func:`ssd_decode_step`  — one-token recurrent update for serving.
+
+Shapes: x (B,S,H,P); dt (B,S,H); A (H,); B/C (B,S,G,N) with H % G == 0;
+D (H,).  Returns y (B,S,H,P) (+ final state (B,H,P,N) if requested).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ssd_naive_scan", "ssd_chunked", "ssd_decode_step"]
+
+
+def _expand_groups(b_or_c: jax.Array, n_heads: int) -> jax.Array:
+    """(B,S,G,N) → (B,S,H,N) by repeating groups."""
+    g = b_or_c.shape[2]
+    return jnp.repeat(b_or_c, n_heads // g, axis=2)
+
+
+def ssd_naive_scan(
+    x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array, C: jax.Array,
+    D: Optional[jax.Array] = None, init_state: Optional[jax.Array] = None,
+    return_state: bool = False,
+):
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    Bh = _expand_groups(B, h).astype(jnp.float32)
+    Ch = _expand_groups(C, h).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    decay = jnp.exp(dtf * A[None, None, :])  # (b,s,h)
+    state0 = jnp.zeros((b, h, p, n), jnp.float32) if init_state is None else init_state.astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, dct, bt, ct = inp  # (b,h,p), (b,h), (b,h), (b,h,n), (b,h,n)
+        state = state * dct[..., None, None] + (dtt[..., None] * xt)[..., None] * bt[..., None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", state, ct)
+        return state, y
+
+    xs = (
+        xf.transpose(1, 0, 2, 3),
+        dtf.transpose(1, 0, 2),
+        decay.transpose(1, 0, 2),
+        Bh.transpose(1, 0, 2, 3),
+        Ch.transpose(1, 0, 2, 3),
+    )
+    state, ys = jax.lax.scan(step, state0, xs)
+    y = ys.transpose(1, 0, 2, 3)
+    if D is not None:
+        y = y + D[None, None, :, None] * xf
+    y = y.astype(x.dtype)
+    return (y, state) if return_state else y
+
+
+def ssd_chunked(
+    x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array, C: jax.Array,
+    D: Optional[jax.Array] = None, chunk: int = 128,
+    init_state: Optional[jax.Array] = None, return_state: bool = False,
+    unroll: bool = False,
+):
+    """Block decomposition (Mamba-2 paper §6): scan over S/chunk chunks.
+
+    ``unroll=True`` python-unrolls the chunk loop (identical numerics; used
+    by the dry-run counter passes so cost analysis sees every chunk)."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    if s % chunk:
+        raise ValueError(f"seq {s} % chunk {chunk} != 0")
+    nc = s // chunk
+    Bh = _expand_groups(B, h).astype(jnp.float32)
+    Ch = _expand_groups(C, h).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    # reshape into chunks: (b, nc, chunk, ...) then scan over nc
+    def rc(t):
+        return t.reshape(b, nc, chunk, *t.shape[2:]).transpose(1, 0, 2, *range(3, t.ndim + 1))
+
+    xs_x, xs_dt, xs_B, xs_C = rc(xf), rc(dtf), rc(Bh), rc(Ch)
+    state0 = jnp.zeros((b, h, p, n), jnp.float32) if init_state is None else init_state.astype(jnp.float32)
+
+    def chunk_step(state, inp):
+        xc, dtc, bc, cc = inp  # (b,Q,h,p), (b,Q,h), (b,Q,h,n), (b,Q,h,n)
+        la = dtc * A[None, None, :]            # log-decay per step (b,Q,h)
+        cs = jnp.cumsum(la, axis=1)            # inclusive cumsum (b,Q,h)
+        # intra-chunk: L[i,j] = exp(cs_i - cs_j) for i >= j  (decay j+1..i)
+        li = cs[:, :, None, :] - cs[:, None, :, :]          # (b,Q,Q,h)
+        iq = jnp.arange(xc.shape[1])
+        causal = (iq[:, None] >= iq[None, :])[None, :, :, None]
+        L = jnp.where(causal, jnp.exp(li), 0.0)
+        scores = jnp.einsum("bihn,bjhn->bijh", cc, bc) * L   # (b,Q,Q,h)
+        y_intra = jnp.einsum("bijh,bjh,bjhp->bihp", scores, dtc, xc)
+        # inter-chunk: contribution of carried state
+        decay_in = jnp.exp(cs)                               # decay from chunk start to i (b,Q,h)
+        y_inter = jnp.einsum("bihn,bhpn,bih->bihp", cc, state, decay_in)
+        # state update: h' = exp(sum la) * h + sum_j exp(cs_Q - cs_j) dt_j B_j x_j
+        total = cs[:, -1, :]                                 # (b,h)
+        decay_out = jnp.exp(total[:, None, :] - cs)          # (b,Q,h)
+        state = state * jnp.exp(total)[..., None, None] + jnp.einsum(
+            "bjh,bjh,bjhn,bjhp->bhpn", decay_out, dtc, bc, xc
+        )
+        return state, y_intra + y_inter
+
+    if unroll:
+        state, ylist = state0, []
+        for i in range(nc):
+            state, yi = chunk_step(state, (xs_x[i], xs_dt[i], xs_B[i], xs_C[i]))
+            ylist.append(yi)
+        ys = jnp.stack(ylist)
+    else:
+        state, ys = jax.lax.scan(chunk_step, state0, (xs_x, xs_dt, xs_B, xs_C))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+    if D is not None:
+        y = y + D[None, None, :, None] * xf
+    y = y.astype(x.dtype)
+    return (y, state) if return_state else y
+
+
+def ssd_decode_step(
+    state: jax.Array, x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+    C: jax.Array, D: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """One-token update. state (B,H,P,N); x (B,H,P); dt (B,H); B/C (B,G,N)."""
+    h = x.shape[1]
+    Bh = jnp.repeat(B, h // B.shape[1], axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(C, h // C.shape[1], axis=1).astype(jnp.float32)
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    decay = jnp.exp(dtf * A[None, :])
+    state = state * decay[..., None, None] + (dtf[..., None] * xf)[..., None] * Bh[:, :, None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch)
+    if D is not None:
+        y = y + D[None, :, None] * xf
+    return y.astype(x.dtype), state

@@ -1,0 +1,27 @@
+"""Production mesh factories (functions — importing never touches jax device
+state; the dry-run sets the 512-placeholder-device XLA flag before any jax
+import)."""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "mesh_axes", "HW"]
+
+
+# TPU v5e hardware constants (roofline denominators)
+HW = {
+    "peak_flops_bf16": 197e12,   # per chip
+    "hbm_bw": 819e9,             # bytes/s per chip
+    "ici_bw": 50e9,              # bytes/s per link
+}
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def mesh_axes(multi_pod: bool = False):
+    return ("pod", "data", "model") if multi_pod else ("data", "model")

@@ -1,0 +1,99 @@
+"""Roofline reporter: results/dryrun/*.json → per-cell terms + markdown table.
+
+    compute_s    = HLO_FLOPs(per chip)      / 197e12          (v5e bf16 peak)
+    memory_s     = HLO_bytes(per chip)      / 819e9            (HBM bw)
+    collective_s = collective_bytes(per chip) / 50e9           (ICI link bw)
+
+HLO counters come from the dry-run's unrolled counter passes (linear
+depth-extrapolated — see dryrun.py); the bottleneck is the max term; the
+roofline fraction = (useful MODEL_FLOPS per chip / peak) / max-term, i.e.
+"what MFU would this step run at if it hit the dominant roofline".
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+__all__ = ["load_cells", "render_table", "pick_hillclimb_cells"]
+
+
+def load_cells(out_dir: str = "results/dryrun", tag: str = "") -> List[Dict[str, Any]]:
+    cells = []
+    for p in sorted(Path(out_dir).glob("*.json")):
+        rec = json.loads(p.read_text())
+        is_tagged = "__" in p.stem.split("__")[-1] or p.stem.count("__") > 2
+        if tag:
+            if not p.stem.endswith(f"__{tag}"):
+                continue
+        elif p.stem.count("__") > 2:
+            continue  # perf-experiment files excluded from the baseline table
+        rec["_file"] = p.name
+        cells.append(rec)
+    return cells
+
+
+def _fmt_s(x: float) -> str:
+    return f"{x*1e3:9.2f}ms" if x < 10 else f"{x:8.2f}s "
+
+
+def render_table(cells: List[Dict[str, Any]], mesh: str = "single") -> str:
+    rows = []
+    head = ("| arch | shape | status | mem meas/TPU-est | fits | compute | memory | collective "
+            "| bound | MODEL/HLO flops | roofline frac |")
+    sep = "|" + "---|" * 11
+    rows.append(head)
+    rows.append(sep)
+    for c in cells:
+        if c.get("mesh") != mesh:
+            continue
+        if c["status"] == "skip":
+            rows.append(f"| {c['arch']} | {c['shape']} | SKIP | – | – | – | – | – | – | – | – |")
+            continue
+        if c["status"] == "error":
+            rows.append(f"| {c['arch']} | {c['shape']} | ERROR | – | – | – | – | – | – | – | – |")
+            continue
+        r = c["roofline"]
+        est = c.get("tpu_memory_estimate_bytes", c["per_device_bytes"])
+        fits = c.get("fits_16gb_tpu_est", c["fits_16gb"])
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | ok "
+            f"| {c['per_device_bytes']/1e9:.1f}/{est/1e9:.1f} GB "
+            f"| {'✓' if fits else '✗'} "
+            f"| {_fmt_s(r['compute_s'])} | {_fmt_s(r['memory_s'])} | {_fmt_s(r['collective_s'])} "
+            f"| {c['bottleneck'].replace('_s','')} "
+            f"| {c['useful_flops_ratio']:.3f} | {c.get('roofline_fraction', 0.0):.4f} |")
+    return "\n".join(rows)
+
+
+def pick_hillclimb_cells(cells: List[Dict[str, Any]]) -> Dict[str, str]:
+    """The three §Perf cells: worst roofline fraction, most collective-bound,
+    most paper-representative (largest tunable surface = the MoE train cell)."""
+    ok = [c for c in cells if c["status"] == "ok" and c.get("mesh") == "single"]
+    worst = min(ok, key=lambda c: c.get("roofline_fraction", 1.0))
+    coll = max(ok, key=lambda c: c["roofline"]["collective_s"] / max(max(c["roofline"].values()), 1e-12))
+    moe_train = [c for c in ok if c["shape"] == "train_4k" and "olmoe" in c["arch"]]
+    rep = moe_train[0] if moe_train else ok[0]
+    return {
+        "worst_fraction": f"{worst['arch']}/{worst['shape']}",
+        "most_collective_bound": f"{coll['arch']}/{coll['shape']}",
+        "paper_representative": f"{rep['arch']}/{rep['shape']}",
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    args = ap.parse_args()
+    cells = load_cells(args.dir, args.tag)
+    print(render_table(cells, args.mesh))
+    ok = [c for c in cells if c["status"] == "ok"]
+    if len(ok) >= 3:
+        print("\nhillclimb candidates:", json.dumps(pick_hillclimb_cells(cells), indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,201 @@
+"""Cell builder: (arch × shape × mesh) → step fn + sharded ShapeDtypeStructs.
+
+``build_cell`` returns everything ``dryrun.py`` needs to
+``jax.jit(step, ...).lower(*args).compile()`` a cell without allocating a
+byte of model state: argument structs carry NamedShardings resolved from the
+logical-axis rules, output shardings pin the big outputs (train state /
+KV caches) to their input layouts so donation aliases them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from ..configs import get_config
+from ..models import model as M
+from ..models.config import ModelConfig
+from ..models.layers import P, dtype_of
+from ..parallel import sharding as shd
+from ..runtime import steps as rt_steps
+from .shapes import SHAPES, Shape, cell_status
+
+__all__ = ["CellPlan", "build_cell", "model_flops", "flops_param_count",
+           "scaled_config", "depth_units"]
+
+
+def depth_units(cfg: ModelConfig) -> int:
+    """Number of repeated depth units (vlm: cross-attn groups; encdec: paired
+    enc+dec layers; otherwise layers).  Counters are linear in this unit."""
+    if cfg.family == "vlm":
+        return cfg.n_layers // cfg.cross_attn_period
+    return cfg.n_layers
+
+
+def scaled_config(cfg: ModelConfig, k: int) -> ModelConfig:
+    """Same architecture at k depth units (for the dry-run counter passes)."""
+    if cfg.family == "vlm":
+        return dataclasses.replace(cfg, n_layers=k * cfg.cross_attn_period)
+    if cfg.family == "encdec":
+        return dataclasses.replace(cfg, n_layers=k, enc_layers=k)
+    return dataclasses.replace(cfg, n_layers=k)
+
+
+@dataclasses.dataclass
+class CellPlan:
+    arch: str
+    shape: Shape
+    step: Callable
+    args: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    rules: shd.Rules
+    meta: Dict[str, Any]
+
+
+def _struct(p: P, rules: shd.Rules, mesh: Mesh, default_dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(p.shape, p.with_dtype(default_dtype),
+                                sharding=shd.sharding_for(p, rules, mesh))
+
+
+def _struct_tree(spec_tree: Any, rules: shd.Rules, mesh: Mesh, default_dtype) -> Any:
+    return jax.tree.map(lambda p: _struct(p, rules, mesh, default_dtype), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _shard_tree(spec_tree: Any, rules: shd.Rules, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda p: shd.sharding_for(p, rules, mesh), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _repl(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, PartitionSpec())
+
+
+def flops_param_count(cfg: ModelConfig) -> int:
+    """Params that do matmul work per token (embedding gather excluded;
+    the logits head counted once)."""
+    total = cfg.param_count()
+    if not cfg.tie_embeddings:
+        total -= cfg.padded_vocab * cfg.d_model  # input embedding gather
+    return total
+
+
+def model_flops(cfg: ModelConfig, shape: Shape) -> float:
+    """MODEL_FLOPS: 6·N·D train, 2·N·D serve (N = active matmul params,
+    D = tokens processed per step) — attention O(S²) term excluded by the
+    textbook convention; the ratio column in §Roofline surfaces it."""
+    n = flops_param_count(cfg)
+    if cfg.is_moe:
+        n_total = cfg.param_count()
+        n_active = cfg.active_param_count()
+        n = n - (n_total - n_active)
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n * d
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n * d
+    d = shape.global_batch  # decode: one token per sequence
+    return 2.0 * n * d
+
+
+def _modal_spec(cfg: ModelConfig, batch: int, seq_len: int) -> Optional[P]:
+    if cfg.family == "encdec":
+        return P((batch, seq_len, cfg.d_model), ("batch", "seq", "d_model"))
+    if cfg.family == "vlm":
+        return P((batch, cfg.num_modal_tokens, cfg.d_model), ("batch", "seq", "d_model"))
+    return None
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh, *,
+               multi_pod: bool = False, microbatches: int = 1,
+               depth_k: Optional[int] = None) -> CellPlan:
+    cfg = get_config(arch)
+    if depth_k is not None:
+        cfg = scaled_config(cfg, depth_k).validate()
+    shape = SHAPES[shape_name]
+    runs, reason = cell_status(cfg, shape)
+    if not runs:
+        raise ValueError(f"cell ({arch}, {shape_name}) skipped: {reason}")
+
+    meta: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "n_params": cfg.param_count(), "n_active_params": cfg.active_param_count(),
+        "model_flops": model_flops(cfg, shape),
+        "chips": mesh.devices.size,
+    }
+
+    if shape.kind == "train":
+        rules = shd.train_rules(multi_pod)
+        state_specs = rt_steps.train_state_specs(cfg)
+        state = _struct_tree(state_specs, rules, mesh, jnp.float32)
+        bspec = {
+            "tokens": P((shape.global_batch, shape.seq_len), ("batch", "seq"), dtype="int32"),
+            "labels": P((shape.global_batch, shape.seq_len), ("batch", "seq"), dtype="int32"),
+        }
+        ms = _modal_spec(cfg, shape.global_batch, shape.seq_len)
+        if ms is not None:
+            bspec["modal"] = ms
+        batch = _struct_tree(bspec, rules, mesh, dtype_of(cfg))
+        lr_scale = jax.ShapeDtypeStruct((), jnp.float32, sharding=_repl(mesh))
+
+        raw_step = rt_steps.make_train_step(cfg, microbatches=microbatches)
+
+        def step(state, batch, lr_scale):
+            with shd.use_rules(mesh, rules):
+                return raw_step(state, batch, lr_scale)
+
+        metrics_sh = {k: _repl(mesh) for k in ("loss", "lr", "grad_norm", "ce", "aux")}
+        out_sh = (_shard_tree(state_specs, rules, mesh), metrics_sh)
+        return CellPlan(arch, shape, step, (state, batch, lr_scale), out_sh, (0,), rules, meta)
+
+    rules = shd.serve_rules(multi_pod)
+    pspecs = M.param_specs(cfg)
+    params = _struct_tree(pspecs, rules, mesh, dtype_of(cfg))
+
+    if shape.kind == "prefill":
+        bspec = {"tokens": P((shape.global_batch, shape.seq_len), ("batch", "seq"), dtype="int32")}
+        ms = _modal_spec(cfg, shape.global_batch, shape.seq_len)
+        if ms is not None:
+            bspec["modal"] = ms
+        batch = _struct_tree(bspec, rules, mesh, dtype_of(cfg))
+        cspecs = M.cache_specs(cfg, shape.global_batch, shape.seq_len, enc_len=shape.seq_len)
+        raw_step = rt_steps.make_prefill_step(cfg, cache_capacity=shape.seq_len)
+
+        def step(params, batch):
+            with shd.use_rules(mesh, rules):
+                return raw_step(params, batch)
+
+        out_sh = {
+            "logits": shd.sharding_for(
+                P((shape.global_batch, cfg.padded_vocab), ("batch", "vocab")), rules, mesh),
+            "caches": _shard_tree(cspecs, rules, mesh),
+            "pos": _repl(mesh),
+        }
+        return CellPlan(arch, shape, step, (params, batch), out_sh, (), rules, meta)
+
+    # decode: one new token against a pre-filled cache of `seq_len` context
+    cspecs = M.cache_specs(cfg, shape.global_batch, shape.seq_len, enc_len=shape.seq_len)
+    dstate = {
+        "token": _struct(P((shape.global_batch,), ("batch",), dtype="int32"), rules, mesh, jnp.int32),
+        "caches": _struct_tree(cspecs, rules, mesh, dtype_of(cfg)),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32, sharding=_repl(mesh)),
+    }
+    raw_step = rt_steps.make_decode_step(cfg)
+
+    def step(params, dstate):
+        with shd.use_rules(mesh, rules):
+            return raw_step(params, dstate)
+
+    out_sh = {
+        "token": shd.sharding_for(P((shape.global_batch,), ("batch",)), rules, mesh),
+        "caches": _shard_tree(cspecs, rules, mesh),
+        "pos": _repl(mesh),
+        "logits": shd.sharding_for(
+            P((shape.global_batch, cfg.padded_vocab), ("batch", "vocab")), rules, mesh),
+    }
+    return CellPlan(arch, shape, step, (params, dstate), out_sh, (1,), rules, meta)

@@ -1,0 +1,53 @@
+"""Bridge between MLOS component settings and the launch CLIs.
+
+The framework's auto-parameters live on module-level smart-component
+singletons; this module gives launchers/optimizers one flat namespace:
+``component.key=value`` strings → ``apply_settings`` calls.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+from ..kernels.flash_attention.ops import attention_settings
+from ..kernels.rmsnorm.ops import rmsnorm_settings
+from ..kernels.ssd.ops import ssd_settings
+from ..models.moe import moe_settings
+from ..models.transformer import stack_settings
+from ..runtime.serve_loop import serve_settings
+
+__all__ = ["SINGLETONS", "apply_overrides", "current_settings", "parse_override"]
+
+SINGLETONS = {
+    "flash_attention": attention_settings,
+    "ssd_kernel": ssd_settings,
+    "rmsnorm_kernel": rmsnorm_settings,
+    "moe_dispatch": moe_settings,
+    "layer_stack": stack_settings,
+    "serve_batching": serve_settings,
+}
+
+
+def parse_override(s: str) -> Dict[str, Dict[str, Any]]:
+    """'layer_stack.remat=dots' → {'layer_stack': {'remat': 'dots'}}."""
+    key, _, val = s.partition("=")
+    comp, _, field = key.partition(".")
+    for cast in (int, float):
+        try:
+            val = cast(val)  # type: ignore[assignment]
+            break
+        except (TypeError, ValueError):
+            continue
+    if val in ("True", "true"):
+        val = True
+    if val in ("False", "false"):
+        val = False
+    return {comp: {field: val}}
+
+
+def apply_overrides(overrides: Dict[str, Dict[str, Any]]) -> None:
+    for comp, kv in overrides.items():
+        SINGLETONS[comp].apply_settings(kv)
+
+
+def current_settings() -> Dict[str, Dict[str, Any]]:
+    return {name: dict(inst.settings) for name, inst in SINGLETONS.items()}

@@ -1,0 +1,157 @@
+"""Shared layers: param specs, norms, MLPs, rotary embeddings.
+
+Parameters are declared via :class:`P` leaf specs carrying *logical axis*
+names (t5x/MaxText style).  A single spec tree is the source of truth for
+initialization, sharding (``repro.parallel.sharding`` maps logical → mesh
+axes) and the dry-run's ShapeDtypeStructs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+__all__ = ["P", "init_leaf", "norm_params", "apply_norm", "mlp_params", "apply_mlp", "rope", "dtype_of"]
+
+
+class P:
+    """Parameter/state leaf spec: shape + logical axes + init scheme.
+
+    ``dtype`` (optional) pins the leaf's dtype (e.g. fp32 SSM decay params,
+    fp32 SSD state); None defers to the caller's default (model dtype).
+    """
+
+    __slots__ = ("shape", "logical", "init", "scale", "dtype")
+
+    def __init__(self, shape: Tuple[int, ...], logical: Tuple[Optional[str], ...],
+                 init: str = "normal", scale: float = 1.0, dtype: Optional[str] = None):
+        assert len(shape) == len(logical), (shape, logical)
+        self.shape = tuple(int(s) for s in shape)
+        self.logical = tuple(logical)
+        self.init = init
+        self.scale = scale
+        self.dtype = dtype
+
+    def with_dtype(self, default) -> Any:
+        return jnp.dtype(self.dtype) if self.dtype else jnp.dtype(default)
+
+    def __repr__(self) -> str:
+        return f"P{self.shape}:{self.logical}:{self.init}"
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def init_leaf(key: jax.Array, p: P, dtype) -> jax.Array:
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, dtype)
+    if p.init == "normal":
+        # fan-in scaled truncated-normal-ish init
+        fan_in = p.shape[-2] if len(p.shape) >= 2 else p.shape[-1]
+        std = p.scale / math.sqrt(max(fan_in, 1))
+        return (std * jax.random.normal(key, p.shape)).astype(dtype)
+    if p.init == "embed":
+        return (0.02 * jax.random.normal(key, p.shape)).astype(dtype)
+    if p.init == "ssm_a":  # A_log init: log of uniform [1, 16]
+        u = jax.random.uniform(key, p.shape, minval=1.0, maxval=16.0)
+        return jnp.log(u).astype(jnp.float32)  # keep SSM decay params fp32
+    if p.init == "ssm_dt":  # dt bias: softplus-inv of uniform dt in [1e-3, 1e-1]
+        u = jax.random.uniform(key, p.shape, minval=math.log(1e-3), maxval=math.log(1e-1))
+        dt = jnp.exp(u)
+        return (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32)
+    raise ValueError(p.init)
+
+
+# ---------------------------------------------------------------------- norms
+def norm_params(cfg: ModelConfig, layers_axis: bool = True) -> Dict[str, P]:
+    """Norm params; 'layernorm_np' (OLMo non-parametric LN) has none."""
+    if cfg.norm == "layernorm_np":
+        return {}
+    lead: Tuple[int, ...] = ()
+    llog: Tuple[Optional[str], ...] = ()
+    out = {"scale": P((cfg.d_model,), ("d_model",), "ones")}
+    if cfg.norm == "layernorm" and cfg.use_bias:
+        out["bias"] = P((cfg.d_model,), ("d_model",), "zeros")
+    return out
+
+
+def apply_norm(params: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig, eps: float = 1e-5) -> jax.Array:
+    from ..parallel.sharding import constrain  # local: avoid import cycle
+
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        y = y * params["scale"].astype(jnp.float32)
+    else:  # layernorm / layernorm_np
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        if cfg.norm == "layernorm":
+            y = y * params["scale"].astype(jnp.float32)
+            if "bias" in params:
+                y = y + params["bias"].astype(jnp.float32)
+    y = y.astype(x.dtype)
+    # pin the (bf16) norm output to the residual layout: without this GSPMD
+    # sometimes hoists the SP all-gather above the fp32→bf16 convert and the
+    # fp32 normed activations get gathered AND saved for backward (2× bytes)
+    if y.ndim == 3:
+        y = constrain(y, ("batch", "seq", None))
+    return y
+
+
+# ----------------------------------------------------------------------- MLPs
+def mlp_params(cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict[str, P]:
+    f = d_ff or cfg.d_ff
+    d = cfg.d_model
+    if cfg.mlp == "swiglu":
+        out = {
+            "wi_gate": P((d, f), ("d_model", "d_ff")),
+            "wi_up": P((d, f), ("d_model", "d_ff")),
+            "wo": P((f, d), ("d_ff", "d_model"), scale=1.0 / math.sqrt(2 * cfg.n_layers or 2)),
+        }
+    else:  # gelu_mlp
+        out = {
+            "wi": P((d, f), ("d_model", "d_ff")),
+            "wo": P((f, d), ("d_ff", "d_model"), scale=1.0 / math.sqrt(2 * cfg.n_layers or 2)),
+        }
+        if cfg.use_bias:
+            out["bi"] = P((f,), ("d_ff",), "zeros")
+            out["bo"] = P((d,), ("d_model",), "zeros")
+    return out
+
+
+def apply_mlp(params: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.mlp == "swiglu":
+        g = jnp.einsum("...d,df->...f", x, params["wi_gate"])
+        u = jnp.einsum("...d,df->...f", x, params["wi_up"])
+        h = jax.nn.silu(g) * u
+        return jnp.einsum("...f,fd->...d", h, params["wo"])
+    h = jnp.einsum("...d,df->...f", x, params["wi"])
+    if "bi" in params:
+        h = h + params["bi"]
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    y = jnp.einsum("...f,fd->...d", h, params["wo"])
+    if "bo" in params:
+        y = y + params["bo"]
+    return y
+
+
+# -------------------------------------------------------------------- rotary
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Apply rotary embedding. x: (..., seq, heads, hd); positions: (..., seq)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, half)
+    cos = jnp.cos(ang)[..., :, None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1).astype(x.dtype)

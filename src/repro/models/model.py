@@ -1,0 +1,229 @@
+"""Top-level model: param specs, init, forward, loss, prefill and decode.
+
+Public entry points (all pure functions over parameter pytrees):
+
+  * :func:`param_specs`  — P-spec tree (the single source of truth for init,
+    sharding and the dry-run's ShapeDtypeStructs).
+  * :func:`init_params`  — materialize parameters.
+  * :func:`loss_fn`      — next-token CE (chunked head) + MoE aux loss.
+  * :func:`cache_specs` / :func:`prefill` / :func:`decode_step` — serving.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import constrain
+from .attention import attn_cache_spec
+from .config import ModelConfig
+from .layers import P, apply_norm, dtype_of, init_leaf, norm_params
+from .ssm import ssm_state_spec
+from .transformer import (block_specs, decode_stack, forward_stack,
+                          prefill_stack, stack_settings, stack_specs)
+
+__all__ = [
+    "param_specs", "init_params", "forward", "loss_fn", "logits_fn",
+    "cache_specs", "prefill", "decode_step",
+]
+
+MOE_AUX_WEIGHT = 0.01
+
+
+# --------------------------------------------------------------------- specs
+def param_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, vp = cfg.d_model, cfg.padded_vocab
+    specs: Dict[str, Any] = {
+        "embed": P((vp, d), ("vocab", "d_model"), "embed"),
+        "ln_f": norm_params(cfg),
+    }
+    if not cfg.tie_embeddings:
+        specs["out"] = P((d, vp), ("d_model", "vocab"))
+    if cfg.family == "encdec":
+        specs["enc"] = stack_specs(block_specs(cfg, "encoder"), cfg.enc_layers)
+        specs["enc_ln_f"] = norm_params(cfg)
+        specs["blocks"] = stack_specs(block_specs(cfg, "decoder"), cfg.n_layers)
+    elif cfg.family == "vlm":
+        groups = cfg.n_layers // cfg.cross_attn_period
+        specs["xblocks"] = stack_specs(block_specs(cfg, "xblock"), groups)
+        specs["blocks"] = stack_specs(stack_specs(block_specs(cfg, "dense"), cfg.cross_attn_period), groups)
+    else:
+        specs["blocks"] = stack_specs(block_specs(cfg), cfg.n_layers)
+    return specs
+
+
+def _is_p(x: Any) -> bool:
+    return isinstance(x, P)
+
+
+def init_params(key: jax.Array, cfg: ModelConfig, dtype=None) -> Dict[str, Any]:
+    dtype = dtype or dtype_of(cfg)
+    specs = param_specs(cfg)
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_p)
+    keys = jax.random.split(key, len(leaves))
+    vals = [init_leaf(k, p, p.with_dtype(dtype)) for k, p in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+# ------------------------------------------------------------------- forward
+def _embed(params: Dict[str, Any], tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    return constrain(params["embed"][tokens], ("batch", "seq", None))
+
+
+def _stack_args(params: Dict[str, Any], cfg: ModelConfig):
+    if cfg.family == "vlm":
+        return {"xblocks": params["xblocks"], "blocks": params["blocks"]}
+    return params["blocks"]
+
+
+def forward(
+    params: Dict[str, Any],
+    cfg: ModelConfig,
+    tokens: jax.Array,                     # (B, S) int32
+    modal: Optional[jax.Array] = None,     # (B, S_modal, d) stubbed frontend embeds
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (h_final (B,S,d), moe_aux)."""
+    x = _embed(params, tokens, cfg)
+    xattn_src = None
+    if cfg.family == "encdec":
+        enc_h, _ = forward_stack(params["enc"], modal.astype(x.dtype), cfg, kind="encoder")
+        xattn_src = apply_norm(params["enc_ln_f"], enc_h, cfg)
+    elif cfg.family == "vlm":
+        xattn_src = modal.astype(x.dtype)
+    h, aux = forward_stack(_stack_args(params, cfg), x, cfg, xattn_src=xattn_src)
+    return apply_norm(params["ln_f"], h, cfg), aux
+
+
+def _out_weight(params: Dict[str, Any], cfg: ModelConfig) -> jax.Array:
+    return params["out"] if not cfg.tie_embeddings else params["embed"].T
+
+
+def logits_fn(params: Dict[str, Any], cfg: ModelConfig, h: jax.Array) -> jax.Array:
+    """Full logits (small shapes / decode only); padded vocab masked."""
+    logits = jnp.einsum("...d,dv->...v", h, _out_weight(params, cfg)).astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab_size:
+        mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(mask, logits, -1e30)
+    return logits
+
+
+def _chunked_ce(h: jax.Array, w: jax.Array, labels: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Next-token CE over sequence chunks (the (B,S,V) logits tensor is never
+    materialized; the chunk body is rematerialized in the backward pass)."""
+    b, s, d = h.shape
+    chunk = min(stack_settings.settings["loss_chunk"], s)
+    while s % chunk:
+        chunk //= 2
+    n = s // chunk
+    hs = h.reshape(b, n, chunk, d).swapaxes(0, 1)          # (n, B, chunk, d)
+    ls = labels.reshape(b, n, chunk).swapaxes(0, 1)
+    vmask = (jnp.arange(cfg.padded_vocab) < cfg.vocab_size) if cfg.padded_vocab != cfg.vocab_size else None
+
+    def body(acc, inp):
+        hc, lc = inp
+        logits = jnp.einsum("bcd,dv->bcv", hc, w).astype(jnp.float32)
+        logits = constrain(logits, ("batch", None, "vocab"))
+        if vmask is not None:
+            logits = jnp.where(vmask, logits, -1e30)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # label logit via iota-compare reduction (NOT take_along_axis): stays
+        # partitioned over a vocab-sharded logits tensor — the gather variant
+        # makes GSPMD all-gather the full (B,chunk,V) logits.
+        cols = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        ll = jnp.sum(jnp.where(cols == jnp.maximum(lc, 0)[..., None], logits, 0.0), axis=-1)
+        valid = (lc >= 0).astype(jnp.float32)
+        nll, cnt = acc
+        return (nll + jnp.sum((lse - ll) * valid), cnt + jnp.sum(valid)), None
+
+    zero = (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+    if n == 1:  # no scan: exact op counts for the dry-run counter passes
+        (nll, cnt), _ = body(zero, (hs[0], ls[0]))
+    else:
+        (nll, cnt), _ = jax.lax.scan(jax.checkpoint(body), zero, (hs, ls))
+    return nll / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(params: Dict[str, Any], cfg: ModelConfig, batch: Dict[str, jax.Array]) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """batch: tokens (B,S) int32, labels (B,S) int32 (-1 = pad), optional modal."""
+    h, aux = forward(params, cfg, batch["tokens"], batch.get("modal"))
+    ce = _chunked_ce(h, _out_weight(params, cfg), batch["labels"], cfg)
+    loss = ce + (MOE_AUX_WEIGHT * aux if cfg.is_moe else 0.0)
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ------------------------------------------------------------------- serving
+def cache_specs(cfg: ModelConfig, batch: int, context: int, enc_len: Optional[int] = None) -> Any:
+    """P-spec tree of the decode state for a context of ``context`` tokens."""
+    def layer_cache(kind: str) -> Dict[str, Any]:
+        out: Dict[str, Any] = {}
+        if kind in ("dense", "moe", "hybrid", "decoder"):
+            out.update(attn_cache_spec(cfg, batch, context))
+        if kind in ("ssm", "hybrid"):
+            out["ssm"] = ssm_state_spec(cfg, batch)
+        if kind == "decoder":
+            e = enc_len or context
+            xspec = attn_cache_spec(cfg, batch, e)
+            out["xk"], out["xv"] = xspec["k"], xspec["v"]
+        return out
+
+    if cfg.family == "vlm":
+        groups = cfg.n_layers // cfg.cross_attn_period
+        # the cross-attention source is ALWAYS the modal frontend's patch
+        # tokens (1601), regardless of the text context length
+        xc = attn_cache_spec(cfg, batch, cfg.num_modal_tokens)
+        return stack_specs({
+            "xk": xc["k"], "xv": xc["v"],
+            "inner": stack_specs(layer_cache("dense"), cfg.cross_attn_period),
+        }, groups)
+    kind = {"encdec": "decoder"}.get(cfg.family, cfg.family)
+    return stack_specs(layer_cache(kind), cfg.n_layers)
+
+
+def init_cache(cfg: ModelConfig, batch: int, context: int, enc_len: Optional[int] = None,
+               dtype=None) -> Any:
+    dtype = dtype or dtype_of(cfg)
+    specs = cache_specs(cfg, batch, context, enc_len)
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, p.with_dtype(dtype)),
+                        specs, is_leaf=_is_p)
+
+
+def prefill(
+    params: Dict[str, Any],
+    cfg: ModelConfig,
+    tokens: jax.Array,                      # (B, S)
+    cache_capacity: int,
+    modal: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Any, jax.Array]:
+    """Process a prompt; returns (last-token logits, caches, pos)."""
+    x = _embed(params, tokens, cfg)
+    xattn_src = None
+    kind = cfg.family
+    if cfg.family == "encdec":
+        enc_h, _ = forward_stack(params["enc"], modal.astype(x.dtype), cfg, kind="encoder")
+        xattn_src = apply_norm(params["enc_ln_f"], enc_h, cfg)
+        kind = "decoder"
+    elif cfg.family == "vlm":
+        xattn_src = modal.astype(x.dtype)
+    h, caches = prefill_stack(_stack_args(params, cfg), x, cfg, cache_capacity,
+                              kind=kind, xattn_src=xattn_src)
+    h = apply_norm(params["ln_f"], h[:, -1:], cfg)
+    logits = logits_fn(params, cfg, h)[:, 0]
+    return logits, caches, jnp.asarray(tokens.shape[1], jnp.int32)
+
+
+def decode_step(
+    params: Dict[str, Any],
+    cfg: ModelConfig,
+    token: jax.Array,                       # (B,) int32 — token at position `pos`
+    caches: Any,
+    pos: jax.Array,                         # scalar int32
+) -> Tuple[jax.Array, Any]:
+    """One decode step: consumes `token`, returns (next-token logits (B,V), caches)."""
+    kind = {"encdec": "decoder"}.get(cfg.family, cfg.family)
+    x = _embed(params, token[:, None], cfg)
+    h, caches = decode_stack(_stack_args(params, cfg), x, caches, pos, cfg, kind=kind)
+    h = apply_norm(params["ln_f"], h, cfg)
+    logits = logits_fn(params, cfg, h)[:, 0]
+    return logits, caches

@@ -1,0 +1,236 @@
+"""Mixture-of-Experts layer: top-k router + capacity-based sparse dispatch.
+
+Dispatch strategies (an MLOS tunable — see ``moe_settings``):
+
+  * ``gather``  — sort-free capacity dispatch: for each (token, k) assignment
+    compute its rank among same-expert assignments, drop beyond capacity,
+    gather tokens into an (E, C, d) buffer, run a batched per-expert FFN
+    (exact active FLOPs ≈ top_k/E of dense), scatter-add back weighted by the
+    gate.  This is the production path; the (E, C, d) buffer is where the
+    EP/TP sharding strategies differ (expert axis vs. expert-ff axis).
+  * ``dense``   — every token through every expert, masked combine.  Exact
+    (no token dropping); used as the numerical oracle and for tiny configs.
+
+Capacity factor, strategy and router jitter are auto-parameters in the
+paper's sense: workload-dependent knobs the MLOS agent tunes per instance.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.registry import MetricSpec, tunable_component
+from ..core.tunable import Categorical, Float
+from ..parallel.sharding import constrain
+from .config import ModelConfig
+from .layers import P
+
+__all__ = ["moe_params", "apply_moe", "moe_settings", "MoeSettings", "router_aux_loss"]
+
+
+@tunable_component(
+    name="moe_dispatch",
+    tunables=(
+        Categorical("strategy", default="auto", choices=("auto", "local_tp", "gather", "dense"),
+                    description="auto: shard_map local dispatch when a mesh is active"),
+        Float("capacity_factor", default=1.25, low=1.0, high=4.0,
+              description="expert buffer slack over perfect balance"),
+    ),
+    metrics=(MetricSpec("dropped_frac", "d"), MetricSpec("time_us", "d")),
+)
+class MoeSettings:
+    pass
+
+
+moe_settings = MoeSettings()
+
+
+def moe_params(cfg: ModelConfig) -> Dict[str, P]:
+    d, e, f = cfg.d_model, cfg.moe_num_experts, cfg.moe_d_ff
+    wo_scale = 1.0 / math.sqrt(2 * max(cfg.n_layers, 1))
+    return {
+        "router": P((d, e), ("d_model", "experts_router")),
+        "wi_gate": P((e, d, f), ("experts", "d_model", "expert_ff")),
+        "wi_up": P((e, d, f), ("experts", "d_model", "expert_ff")),
+        "wo": P((e, f, d), ("experts", "expert_ff", "d_model"), scale=wo_scale),
+    }
+
+
+def _route(params, x2d: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Router: returns (gates (T,k) f32, expert_ids (T,k) i32, probs (T,E) f32)."""
+    logits = jnp.einsum("td,de->te", x2d.astype(jnp.float32), params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, cfg.moe_top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)  # renormalize over top-k
+    return gates, ids.astype(jnp.int32), probs
+
+
+def router_aux_loss(probs: jax.Array, ids: jax.Array, n_experts: int) -> jax.Array:
+    """Switch-style load-balancing loss: E * sum_e f_e * p_e."""
+    t = probs.shape[0]
+    counts = jnp.zeros((n_experts,), jnp.float32).at[ids.reshape(-1)].add(1.0)
+    frac_tokens = counts / jnp.maximum(counts.sum(), 1.0)
+    frac_probs = probs.mean(axis=0)
+    return n_experts * jnp.sum(frac_tokens * frac_probs)
+
+
+def _expert_ffn(params, xe: jax.Array) -> jax.Array:
+    """Batched per-expert SwiGLU. xe: (E, C, d) -> (E, C, d)."""
+    g = jnp.einsum("ecd,edf->ecf", xe, params["wi_gate"])
+    u = jnp.einsum("ecd,edf->ecf", xe, params["wi_up"])
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("ecf,efd->ecd", h, params["wo"])
+
+
+def _local_dispatch_ffn(params, x2d: jax.Array, cfg: ModelConfig, cf: float,
+                        ff_axes) -> Tuple[jax.Array, jax.Array]:
+    """Per-device capacity dispatch + expert FFN (runs INSIDE shard_map, so
+    every scatter/gather is local — GSPMD never sees them).  Token→expert
+    rows are built with broadcast-repeat (no gather); tokens beyond the
+    per-device capacity are dropped (GShard per-group semantics)."""
+    t, d = x2d.shape
+    e, k = cfg.moe_num_experts, cfg.moe_top_k
+    cap = int(max(k, math.ceil(cf * t * k / e)))
+    gates, ids, probs = _route(params, x2d, cfg)
+    aux = router_aux_loss(probs, ids, e)
+
+    flat_ids = ids.reshape(-1)
+    flat_gates = gates.reshape(-1)
+    onehot = jax.nn.one_hot(flat_ids, e, dtype=jnp.int32)
+    rank = (jnp.cumsum(onehot, axis=0) - onehot)[jnp.arange(t * k), flat_ids]
+    keep = rank < cap
+    slot = jnp.where(keep, rank, cap)
+
+    x_rep = jnp.broadcast_to(x2d[:, None, :], (t, k, d)).reshape(t * k, d)
+    buf = jnp.zeros((e, cap + 1, d), x2d.dtype).at[flat_ids, slot].set(x_rep, mode="drop")
+    ye = _expert_ffn(params, buf[:, :cap])
+    if ff_axes:
+        ye = jax.lax.psum(ye, ff_axes)           # TP reduce over the expert-ff shards
+    token_of = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    w = jnp.where(keep, flat_gates, 0.0).astype(x2d.dtype)
+    yk = ye[flat_ids, jnp.minimum(slot, cap - 1)]
+    y = jnp.zeros((t, d), x2d.dtype).at[token_of].add(yk * w[:, None], mode="drop")
+    return y, aux
+
+
+def _moe_shard_map(params, x: jax.Array, cfg: ModelConfig, cf: float,
+                   mesh, rules) -> Tuple[jax.Array, jax.Array]:
+    """shard_map MoE: residual stays (batch×seq)-sharded; expert weights come
+    in ff-sharded over `model` (all-gathered over the FSDP axes at the
+    boundary, once, in compute dtype); dispatch is local per device."""
+    from ..parallel import sharding as shd
+    from jax.sharding import PartitionSpec as PSpec
+
+    names = set(mesh.axis_names)
+    data_axes = tuple(a for a in ("pod", "data") if a in names)
+    model_axis = "model" if "model" in names else None
+    ff_ok = model_axis and cfg.moe_d_ff % mesh.shape["model"] == 0
+
+    b, sl, _ = x.shape
+    dsize = 1
+    batch_axes = ()
+    for a in data_axes:  # largest prefix of (pod, data) dividing the batch
+        if b % (dsize * mesh.shape[a]) == 0:
+            batch_axes += (a,)
+            dsize *= mesh.shape[a]
+    seq_ax = model_axis if (model_axis and sl % mesh.shape["model"] == 0) else None
+    x_spec = PSpec(batch_axes if len(batch_axes) > 1 else (batch_axes[0] if batch_axes else None),
+                   seq_ax, None)
+    # expert-ff TP axes: `model` plus any data axes NOT carrying batch rows
+    # (B=1 long-context decode: weights stay 2D-resident — no per-step
+    # regather; with batch on `data` the regather is the price of DP).
+    ff_axes = ("model",) if model_axis else ()
+    ff_axes += tuple(a for a in data_axes if a not in batch_axes)
+    while ff_axes and cfg.moe_d_ff % math.prod(mesh.shape[a] for a in ff_axes):
+        ff_axes = ff_axes[:-1]
+    ff_ok = bool(ff_axes)
+    ff_spec = ff_axes if len(ff_axes) > 1 else (ff_axes[0] if ff_axes else None)
+    ff = PSpec(None, None, ff_spec)
+    ffT = PSpec(None, ff_spec, None)
+    in_specs = (
+        {"router": PSpec(None, None), "wi_gate": ff, "wi_up": ff, "wo": ffT},
+        x_spec,
+    )
+    out_specs = (x_spec, PSpec())
+
+    def body(p, x_loc):
+        b_loc, s_loc, d = x_loc.shape
+        y, aux = _local_dispatch_ffn(p, x_loc.reshape(b_loc * s_loc, d), cfg, cf,
+                                     ff_axes if ff_ok else None)
+        axes = tuple(a for a in (*data_axes, model_axis) if a)
+        aux = jax.lax.pmean(aux, axes)
+        return y.reshape(b_loc, s_loc, d), aux
+
+    return jax.shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                         check_vma=False)(params, x)
+
+
+def apply_moe(
+    params: Dict[str, jax.Array],
+    x: jax.Array,                # (B, S, d)
+    cfg: ModelConfig,
+    *,
+    strategy: Optional[str] = None,
+    capacity_factor: Optional[float] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y, aux_loss)."""
+    s = moe_settings.settings
+    strategy = strategy or s["strategy"]
+    cf = capacity_factor or s["capacity_factor"]
+
+    if strategy in ("auto", "local_tp"):
+        from ..parallel.sharding import active_rules
+
+        mesh, rules = active_rules()
+        if mesh is not None:
+            return _moe_shard_map(params, x, cfg, cf, mesh, rules)
+        if strategy == "local_tp":
+            b, sl, d = x.shape
+            y, aux = _local_dispatch_ffn(params, x.reshape(b * sl, d), cfg, cf, None)
+            return y.reshape(b, sl, d), aux
+        strategy = "gather"  # auto without a mesh → single-device gather path
+
+    b, sl, d = x.shape
+    t = b * sl
+    e, k = cfg.moe_num_experts, cfg.moe_top_k
+    x2d = x.reshape(t, d)
+    gates, ids, probs = _route(params, x2d, cfg)
+    aux = router_aux_loss(probs, ids, e)
+
+    if strategy == "dense":
+        ye = _expert_ffn(params, jnp.broadcast_to(x2d, (e, t, d)))      # (E, T, d)
+        onehot = jax.nn.one_hot(ids, e, dtype=jnp.float32)              # (T, k, E)
+        w = jnp.einsum("tk,tke->te", gates, onehot)                     # (T, E)
+        y = jnp.einsum("te,etd->td", w.astype(x.dtype), ye)
+        return y.reshape(b, sl, d), aux
+
+    # --- gather/scatter capacity dispatch -----------------------------------
+    cap = int(max(k, math.ceil(cf * t * k / e)))
+    flat_ids = ids.reshape(-1)                                          # (T*k,)
+    flat_gates = gates.reshape(-1)
+    token_of = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)            # (T*k,)
+
+    # rank of each assignment within its expert = # of earlier same-expert picks
+    onehot = jax.nn.one_hot(flat_ids, e, dtype=jnp.int32)               # (T*k, E)
+    rank = (jnp.cumsum(onehot, axis=0) - onehot)[jnp.arange(t * k), flat_ids]
+    keep = rank < cap
+    slot = jnp.where(keep, rank, cap)                                   # overflow -> trash slot
+
+    # gather tokens into (E, C+1, d); last slot is the overflow bin
+    buf = jnp.zeros((e, cap + 1, d), x.dtype)
+    buf = buf.at[flat_ids, slot].set(x2d[token_of], mode="drop")
+    # EP layout: the dispatch buffer lives expert-sharded (the implicit
+    # all-to-all happens here, once), capacity-sharded as fallback.
+    buf = constrain(buf, ("experts", "capacity", None))
+    ye = _expert_ffn(params, buf[:, :cap])                              # (E, C, d)
+    ye = constrain(ye, ("experts", "capacity", None))
+
+    # combine: scatter back to tokens, weighted by gate (dropped -> 0)
+    w = jnp.where(keep, flat_gates, 0.0).astype(x.dtype)
+    y = jnp.zeros((t, d), x.dtype)
+    yk = ye[flat_ids, jnp.minimum(slot, cap - 1)]                       # (T*k, d)
+    y = y.at[token_of].add(yk * w[:, None], mode="drop")
+    return y.reshape(b, sl, d), aux

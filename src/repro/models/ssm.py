@@ -1,0 +1,164 @@
+"""Mamba-2 (SSD) mixer block, pure JAX, built on kernels/ssd.
+
+Layout follows the Mamba-2 reference: an input projection producing
+(z, x, B, C, dt), a causal depthwise conv over the (x, B, C) channels, the
+SSD state-space core, a gated RMSNorm, and an output projection.  Parameters
+are kept as separate leaves (wz/wx/wB/wC/wdt) so tensor-parallel sharding of
+the head dimension is a plain logical-axis rule.
+
+Decode state per layer:
+  * conv:  (B, conv_k-1, H*P + 2*G*N)  — last inputs of the conv channels
+  * ssd:   (B, H, P, N)                — the SSM state
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.ssd import ops as ssd_ops
+from ..parallel.sharding import constrain
+from .config import ModelConfig
+from .layers import P
+
+__all__ = ["ssm_params", "ssm_state_spec", "apply_ssm", "apply_ssm_decode"]
+
+
+def ssm_params(cfg: ModelConfig) -> Dict[str, P]:
+    d = cfg.d_model
+    h, p, n, g = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    ck = cfg.ssm_conv
+    wo_scale = 1.0 / math.sqrt(2 * max(cfg.n_layers, 1))
+    return {
+        "wz": P((d, h, p), ("d_model", "ssm_heads", "ssm_head_dim")),
+        "wx": P((d, h, p), ("d_model", "ssm_heads", "ssm_head_dim")),
+        "wB": P((d, g, n), ("d_model", "ssm_groups", "ssm_state")),
+        "wC": P((d, g, n), ("d_model", "ssm_groups", "ssm_state")),
+        "wdt": P((d, h), ("d_model", "ssm_heads")),
+        "conv_x": P((ck, h, p), ("conv_k", "ssm_heads", "ssm_head_dim"), "normal", scale=0.5),
+        "conv_B": P((ck, g, n), ("conv_k", "ssm_groups", "ssm_state"), "normal", scale=0.5),
+        "conv_C": P((ck, g, n), ("conv_k", "ssm_groups", "ssm_state"), "normal", scale=0.5),
+        "A_log": P((h,), ("ssm_heads",), "ssm_a", dtype="float32"),
+        "dt_bias": P((h,), ("ssm_heads",), "ssm_dt", dtype="float32"),
+        "D": P((h,), ("ssm_heads",), "ones"),
+        "norm_scale": P((h, p), ("ssm_heads", "ssm_head_dim"), "ones"),
+        "wo": P((h, p, d), ("ssm_heads", "ssm_head_dim", "d_model"), scale=wo_scale),
+    }
+
+
+def ssm_state_spec(cfg: ModelConfig, batch: int) -> Dict[str, P]:
+    h, p, n, g = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    conv_ch = h * p + 2 * g * n
+    return {
+        "conv": P((batch, cfg.ssm_conv - 1, conv_ch), ("batch", None, "ssm_channels"), "zeros"),
+        "ssd": P((batch, h, p, n), ("batch", "ssm_heads", "ssm_head_dim", "ssm_state"),
+                 "zeros", dtype="float32"),
+    }
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, prev: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv. u: (B, S, C); w: (K, C); prev: (B, K-1, C) history."""
+    k = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((u.shape[0], k - 1, u.shape[2]), u.dtype)
+    up = jnp.concatenate([prev.astype(u.dtype), u], axis=1)            # (B, S+K-1, C)
+    out = sum(up[:, i : i + u.shape[1]] * w[i][None, None] for i in range(k))
+    return jax.nn.silu(out.astype(jnp.float32)).astype(u.dtype)
+
+
+def _gated_norm(y: jax.Array, z: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm(y * silu(z)) * scale over the head dim. y/z: (..., H, P)."""
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    r = jax.lax.rsqrt(jnp.mean(yf * yf, axis=-1, keepdims=True) + eps)
+    return (yf * r * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def _split_conv_channels(cfg: ModelConfig, uc: jax.Array):
+    h, p, n, g = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    hx = uc[..., : h * p].reshape(*uc.shape[:-1], h, p)
+    b = uc[..., h * p : h * p + g * n].reshape(*uc.shape[:-1], g, n)
+    c = uc[..., h * p + g * n :].reshape(*uc.shape[:-1], g, n)
+    return hx, b, c
+
+
+def apply_ssm(
+    params: Dict[str, jax.Array],
+    x: jax.Array,                        # (B, S, d)
+    cfg: ModelConfig,
+    *,
+    init_state: Optional[Dict[str, jax.Array]] = None,
+    return_state: bool = False,
+):
+    h, p = cfg.ssm_heads, cfg.ssm_head_dim
+    z = jnp.einsum("bsd,dhp->bshp", x, params["wz"])
+    xs = jnp.einsum("bsd,dhp->bshp", x, params["wx"])
+    bs = jnp.einsum("bsd,dgn->bsgn", x, params["wB"])
+    cs = jnp.einsum("bsd,dgn->bsgn", x, params["wC"])
+    dt = jnp.einsum("bsd,dh->bsh", x, params["wdt"])
+
+    conv_w = jnp.concatenate(
+        [params["conv_x"].reshape(cfg.ssm_conv, -1),
+         params["conv_B"].reshape(cfg.ssm_conv, -1),
+         params["conv_C"].reshape(cfg.ssm_conv, -1)], axis=-1)
+    u = jnp.concatenate([xs.reshape(*xs.shape[:2], -1),
+                         bs.reshape(*bs.shape[:2], -1),
+                         cs.reshape(*cs.shape[:2], -1)], axis=-1)
+    prev = None if init_state is None else init_state["conv"]
+    uc = _causal_conv(u, conv_w, prev)
+    xs, bs, cs = _split_conv_channels(cfg, uc)
+    # SP transition (as in attention): SSD runs head-parallel over `model`
+    # with the sequence gathered once per layer; if heads don't divide the
+    # axis (hymba: 25) the head DIM shards instead (rules fallback).
+    xs = constrain(xs, ("batch", None, "ssm_heads", "ssm_head_dim"))
+    bs = constrain(bs, ("batch", None, None, None))
+    cs = constrain(cs, ("batch", None, None, None))
+    dt = constrain(dt, ("batch", None, "ssm_heads"))
+
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+    ssd_init = None if init_state is None else init_state["ssd"]
+    y, state = ssd_ops.ssd(xs, dtp, a, bs, cs, params["D"],
+                           init_state=ssd_init, return_state=True)
+    y = _gated_norm(y, z, params["norm_scale"])
+    out = jnp.einsum("bshp,hpd->bsd", y, params["wo"])
+    if return_state:
+        new_conv = jnp.concatenate([prev.astype(u.dtype), u], axis=1)[:, -(cfg.ssm_conv - 1):] \
+            if prev is not None else u[:, -(cfg.ssm_conv - 1):]
+        if u.shape[1] < cfg.ssm_conv - 1:  # short prefill: left-pad history
+            pad = jnp.zeros((u.shape[0], cfg.ssm_conv - 1 - u.shape[1], u.shape[2]), u.dtype)
+            new_conv = jnp.concatenate([pad, new_conv], axis=1)
+        return out, {"conv": new_conv, "ssd": state}
+    return out
+
+
+def apply_ssm_decode(
+    params: Dict[str, jax.Array],
+    x: jax.Array,                        # (B, 1, d)
+    state: Dict[str, jax.Array],
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    z = jnp.einsum("bsd,dhp->bshp", x, params["wz"])[:, 0]
+    xs = jnp.einsum("bsd,dhp->bshp", x, params["wx"])
+    bs = jnp.einsum("bsd,dgn->bsgn", x, params["wB"])
+    cs = jnp.einsum("bsd,dgn->bsgn", x, params["wC"])
+    dt = jnp.einsum("bsd,dh->bsh", x, params["wdt"])[:, 0]
+
+    conv_w = jnp.concatenate(
+        [params["conv_x"].reshape(cfg.ssm_conv, -1),
+         params["conv_B"].reshape(cfg.ssm_conv, -1),
+         params["conv_C"].reshape(cfg.ssm_conv, -1)], axis=-1)
+    u = jnp.concatenate([xs.reshape(*xs.shape[:2], -1),
+                         bs.reshape(*bs.shape[:2], -1),
+                         cs.reshape(*cs.shape[:2], -1)], axis=-1)  # (B, 1, C)
+    uc = _causal_conv(u, conv_w, state["conv"])                    # (B, 1, C)
+    new_conv = jnp.concatenate([state["conv"].astype(u.dtype), u], axis=1)[:, 1:]
+    xs1, bs1, cs1 = _split_conv_channels(cfg, uc[:, 0])
+
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, ssd_state = ssd_ops.ssd_decode_step(state["ssd"], xs1, dtp, a, bs1, cs1, params["D"])
+    y = _gated_norm(y, z, params["norm_scale"])
+    out = jnp.einsum("bhp,hpd->bd", y, params["wo"])[:, None]
+    return out, {"conv": new_conv, "ssd": ssd_state}

@@ -1,0 +1,71 @@
+"""AdamW over parameter pytrees (fp32 master weights), pure functions.
+
+No optax on this container — this is the framework's own optimizer substrate.
+State = {"m": tree, "v": tree, "count": scalar}; m/v inherit the param
+sharding (same logical axes), so ZeRO-style sharding of optimizer state
+falls out of the rules table for free.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["adamw_init", "adamw_update", "global_norm", "clip_by_global_norm"]
+
+
+def adamw_init(params: Any) -> Dict[str, Any]:
+    zeros = lambda t: jax.tree.map(lambda x: jnp.zeros_like(x, dtype=jnp.float32), t)
+    return {"m": zeros(params), "v": zeros(params), "count": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree: Any, max_norm: float) -> Tuple[Any, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), tree), norm
+
+
+def adamw_update(
+    grads: Any,
+    state: Dict[str, Any],
+    params: Any,
+    *,
+    lr: jax.Array,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: Optional[float] = 1.0,
+) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    gnorm = global_norm(grads)
+    if clip_norm is not None:
+        grads, _ = clip_by_global_norm(grads, clip_norm)
+    count = state["count"] + 1
+    cf = count.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** cf
+    bc2 = 1.0 - b2 ** cf
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        pf = p.astype(jnp.float32)
+        m = b1 * m + (1.0 - b1) * g
+        v = b2 * v + (1.0 - b2) * g * g
+        step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        pf = pf - lr * (step + weight_decay * pf)
+        return pf.astype(p.dtype), m, v
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "count": count}, {"grad_norm": gnorm}

@@ -1,0 +1,61 @@
+"""Int8 gradient compression with error feedback, for cross-pod data parallel.
+
+The multi-pod mesh's slowest links are the pod-to-pod DCN hops; compressing
+the DP gradient reduction over the ``pod`` axis cuts those bytes ~4× (bf16→
+int8 payload + fp32 scale per tensor).  Error feedback keeps the quantization
+bias out of the optimization trajectory (Seide et al. / 1-bit-Adam lineage).
+
+``compressed_psum_pod`` is built on shard_map + all_gather of the *quantized*
+payload (the wire format), with local dequant+sum — semantically a psum over
+the pod axis, but the collective moves int8.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as PSpec
+
+__all__ = ["quantize_int8", "dequantize_int8", "ef_compress_tree", "compressed_psum_pod"]
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_tree(grads: Any, err: Any) -> Tuple[Any, Any, Any]:
+    """Error-feedback int8 round-trip: returns (decoded_grads, new_err, wire_bits)."""
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, s = quantize_int8(gf)
+        dec = dequantize_int8(q, s)
+        return dec, gf - dec
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(err)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    dec = treedef.unflatten([o[0] for o in out])
+    new_err = treedef.unflatten([o[1] for o in out])
+    return dec, new_err, sum(g.size * 8 for g in flat_g)
+
+
+def compressed_psum_pod(x: jax.Array, mesh, axis: str = "pod") -> jax.Array:
+    """psum(x) over `axis` moving int8 on the wire (shard_map + all_gather)."""
+    def body(xs):
+        q, s = quantize_int8(xs)
+        qs = jax.lax.all_gather(q, axis)          # int8 on the wire
+        ss = jax.lax.all_gather(s, axis).reshape((-1,) + (1,) * xs.ndim)
+        return jnp.sum(qs.astype(jnp.float32) * ss, axis=0).astype(xs.dtype)
+
+    spec = PSpec(*([None] * x.ndim))
+    return jax.shard_map(body, mesh=mesh, in_specs=spec, out_specs=spec,
+                         check_vma=False)(x)

@@ -1,0 +1,19 @@
+"""LR schedules as pure jnp functions of the step counter."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["warmup_cosine", "constant"]
+
+
+def constant(step, base_lr: float = 3e-4):
+    return jnp.full((), base_lr, jnp.float32)
+
+
+def warmup_cosine(step, base_lr: float = 3e-4, warmup: int = 100, total: int = 10000,
+                  min_frac: float = 0.1):
+    s = jnp.asarray(step, jnp.float32)
+    warm = base_lr * s / jnp.maximum(warmup, 1)
+    prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(s < warmup, warm, cos)

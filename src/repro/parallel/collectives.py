@@ -1,0 +1,68 @@
+"""Explicit compute/comm-overlap collectives (shard_map + ppermute).
+
+XLA's GSPMD already inserts and schedules collectives; these hand-rolled
+variants exist for the cases the §Perf log shows GSPMD scheduling poorly —
+chiefly the ring **collective matmul** (Wang et al., "Overlap communication
+with dependent computation"): instead of `all_gather(x) @ w` (a bandwidth
+burst followed by idle compute), the gather becomes a ring of ppermutes,
+each overlapped with the partial matmul of the shard currently held.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as PSpec
+
+__all__ = ["ring_allgather_matmul", "psum_matmul"]
+
+
+def ring_allgather_matmul(x: jax.Array, w: jax.Array, mesh: Mesh, axis: str = "model"):
+    """y = all_gather_seq(x) @ w_nshard as a compute/comm-overlapped ring.
+
+    x: (b, s, k) sharded on s over ``axis``   (sequence parallel residual)
+    w: (k, n)    sharded on n over ``axis``   (tensor parallel weight)
+    returns (b, s, n) with s full and n sharded over ``axis`` — without ever
+    materializing the gathered (b, s_global, k) activation.
+    """
+    n_dev = mesh.shape[axis]
+
+    def body(xs, ws):
+        # xs: (b, s_local, k); ws: (k, n_local)
+        idx = jax.lax.axis_index(axis)
+        b, s_local, _ = xs.shape
+        n_local = ws.shape[-1]
+        y0 = jnp.zeros((b, s_local * n_dev, n_local), xs.dtype)
+        fwd = [(j, (j + 1) % n_dev) for j in range(n_dev)]
+
+        def step(i, carry):
+            y, cur = carry
+            src = (idx - i) % n_dev                    # owner of `cur`
+            part = jnp.einsum("bsk,kn->bsn", cur, ws)  # overlaps with ppermute
+            y = jax.lax.dynamic_update_slice_in_dim(y, part, src * s_local, axis=1)
+            cur = jax.lax.ppermute(cur, axis, fwd)
+            return y, cur
+
+        y, _ = jax.lax.fori_loop(0, n_dev, step, (y0, xs))
+        return y
+
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(PSpec(None, axis, None), PSpec(None, axis)),
+        out_specs=PSpec(None, None, axis),
+        check_vma=False,  # zero-init loop carry is unvarying; ring fills it
+    )(x, w)
+
+
+def psum_matmul(x: jax.Array, w: jax.Array, mesh: Mesh, axis: str = "model"):
+    """y = x @ w with the contraction dim sharded on both sides: local partial
+    matmul + one psum (the reduce side of Megatron TP), exposed explicitly so
+    the §Perf log can compare against GSPMD's choice."""
+    def body(xs, ws):
+        return jax.lax.psum(jnp.einsum("bsk,kn->bsn", xs, ws), axis)
+
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(PSpec(None, None, axis), PSpec(axis, None)),
+        out_specs=PSpec(None, None, None),
+        check_vma=False,
+    )(x, w)

@@ -1,0 +1,150 @@
+"""Checkpointing: atomic, async, resumable, reshard-on-restore.
+
+Layout:  <root>/step_<k>/arrays.npz + manifest.json, written to a ``.tmp``
+sibling then ``os.replace``d — a reader never sees a partial checkpoint.
+``AsyncCheckpointer`` snapshots device arrays to host synchronously (cheap)
+and does the serialization/fsync on a worker thread, so the train loop
+blocks only for the host copy (the standard TPU framework pattern).
+
+Restore takes an optional sharding tree: arrays are ``device_put`` with the
+*target* topology's shardings — this is the elastic-rescale entry point.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step", "AsyncCheckpointer"]
+
+_SEP = "/"
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":  # npz can't round-trip ml_dtypes
+            flat[key + "::bf16"] = arr.view(np.uint16)
+        else:
+            flat[key] = arr
+    return flat
+
+
+def _unflatten_key(flat: Dict[str, np.ndarray], key: str) -> np.ndarray:
+    if key in flat:
+        return flat[key]
+    import ml_dtypes  # shipped with jax
+
+    return flat[key + "::bf16"].view(ml_dtypes.bfloat16)
+
+
+def save_checkpoint(root: str, step: int, tree: Any, extra: Optional[Dict] = None) -> Path:
+    root_p = Path(root)
+    final = root_p / f"step_{step:08d}"
+    tmp = root_p / f".tmp_step_{step:08d}_{os.getpid()}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    flat = _flatten(tree)
+    np.savez(tmp / "arrays.npz", **flat)
+    manifest = {
+        "step": int(step),
+        "time": time.time(),
+        "keys": sorted(flat),
+        "extra": extra or {},
+    }
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    if final.exists():
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def latest_step(root: str) -> Optional[int]:
+    p = Path(root)
+    if not p.exists():
+        return None
+    steps = sorted(int(d.name.split("_")[1]) for d in p.iterdir()
+                   if d.is_dir() and d.name.startswith("step_"))
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(root: str, template: Any, step: Optional[int] = None,
+                       shardings: Optional[Any] = None) -> Tuple[Any, Dict]:
+    """Restore into the structure of ``template``; optionally reshard leaves
+    onto ``shardings`` (same treedef) — used for elastic topology changes."""
+    step = step if step is not None else latest_step(root)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {root}")
+    d = Path(root) / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    with np.load(d / "arrays.npz") as z:
+        flat = {k: z[k] for k in z.files}
+
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
+                    else [None] * len(paths))
+    leaves: List[Any] = []
+    for (path, leaf), shd in zip(paths, shard_leaves):
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        arr = _unflatten_key(flat, key)
+        if hasattr(leaf, "dtype"):
+            arr = arr.astype(leaf.dtype)
+        leaves.append(jax.device_put(arr, shd) if shd is not None else jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest
+
+
+class AsyncCheckpointer:
+    """Non-blocking saves with bounded retention and crash-safe atomicity."""
+
+    def __init__(self, root: str, max_to_keep: int = 3):
+        self.root = root
+        self.max_to_keep = max_to_keep
+        self._thread: Optional[threading.Thread] = None
+        self._err: Optional[BaseException] = None
+
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None,
+             blocking: bool = False) -> None:
+        self.wait()  # one in-flight save at a time
+        host_tree = jax.tree.map(np.asarray, tree)  # sync device→host snapshot
+
+        def work():
+            try:
+                save_checkpoint(self.root, step, host_tree, extra)
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self._err = e
+
+        if blocking:
+            work()
+            self._raise()
+        else:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+
+    def _gc(self) -> None:
+        p = Path(self.root)
+        steps = sorted(int(d.name.split("_")[1]) for d in p.iterdir()
+                       if d.is_dir() and d.name.startswith("step_"))
+        for s in steps[: -self.max_to_keep]:
+            shutil.rmtree(p / f"step_{s:08d}", ignore_errors=True)
+
+    def _raise(self) -> None:
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise err
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        self._raise()

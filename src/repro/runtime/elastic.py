@@ -1,0 +1,50 @@
+"""Elastic scaling: re-plan the mesh for a changed device count and reshard.
+
+On failure without spares (or on a capacity grant) the job continues at a
+different world size: ``replan_mesh`` re-factorizes the device count into
+(data, model) — keeping the model axis as close as possible to the old one
+(weights layouts survive; only the DP degree changes) — and
+``reshard_state`` restores a checkpoint onto the new topology by device_put
+with the new rules' shardings (restore-time resharding: no all-to-all
+migration protocol needed, the filesystem is the exchange medium).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from ..models.config import ModelConfig
+from ..parallel import sharding as shd
+
+__all__ = ["replan_mesh", "reshard_state", "usable_factorization"]
+
+
+def usable_factorization(n_devices: int, prefer_model: int) -> Tuple[int, int]:
+    """(data, model) with model | n_devices, model as close to prefer_model
+    as possible (never exceeding it), data = n_devices // model."""
+    best = 1
+    for m in range(1, prefer_model + 1):
+        if n_devices % m == 0:
+            best = m
+    return n_devices // best, best
+
+
+def replan_mesh(n_devices: int, prefer_model: int = 16,
+                devices: Optional[Any] = None) -> Mesh:
+    data, model = usable_factorization(n_devices, prefer_model)
+    devs = (devices if devices is not None else jax.devices())[:n_devices]
+    import numpy as np
+
+    return Mesh(np.asarray(devs).reshape(data, model), ("data", "model"))
+
+
+def reshard_state(state: Any, spec_tree: Any, rules: shd.Rules, mesh: Mesh) -> Any:
+    """device_put every leaf with the sharding the new (rules, mesh) assigns."""
+    shardings = shd.tree_shardings(spec_tree, rules, mesh)
+
+    def put(x, s):
+        return jax.device_put(x, s)
+
+    return jax.tree.map(put, state, shardings)

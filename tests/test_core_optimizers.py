@@ -1,0 +1,100 @@
+"""Optimizer correctness: RS/Grid/OAAT/BO converge on synthetic surfaces."""
+import numpy as np
+import pytest
+
+from repro.core.optimizers import GP, BayesOpt, GridSearch, OneAtATime, RandomSearch, make_optimizer, optimize
+from repro.core.tunable import Categorical, Float, Int, TunableSpace
+
+
+def quad_space():
+    return TunableSpace([Float("x", 0.0, -2.0, 2.0), Float("y", 0.0, -2.0, 2.0)])
+
+
+def quad(cfg):
+    return (cfg["x"] - 1.0) ** 2 + (cfg["y"] + 0.5) ** 2
+
+
+def test_gp_fits_smooth_function():
+    rng = np.random.default_rng(0)
+    X = rng.random((30, 1))
+    y = np.sin(6 * X[:, 0])
+    gp = GP(kernel="matern32").fit(X, y)
+    Xs = np.linspace(0.05, 0.95, 20)[:, None]
+    mu, sd = gp.predict(Xs)
+    assert np.max(np.abs(mu - np.sin(6 * Xs[:, 0]))) < 0.25
+    # Predictions at training points should be near-exact and confident.
+    mu_t, sd_t = gp.predict(X[:5])
+    assert np.allclose(mu_t, y[:5], atol=0.05)
+
+
+@pytest.mark.parametrize("kernel", ["rbf", "matern32", "matern52"])
+def test_gp_kernels_psd(kernel):
+    rng = np.random.default_rng(1)
+    X = rng.random((20, 3))
+    y = rng.standard_normal(20)
+    gp = GP(kernel=kernel, fit_hypers=False).fit(X, y)  # must not raise (cholesky ok)
+    mu, sd = gp.predict(X)
+    assert np.all(sd >= 0)
+
+
+def test_random_search_converges():
+    opt = RandomSearch(quad_space(), seed=0)
+    cfg, val = optimize(opt, quad, budget=200)
+    assert val < 0.1
+
+
+def test_bayesopt_beats_random_on_smooth():
+    # On a smooth quadratic with a small budget BO should do at least as well.
+    bo_vals, rs_vals = [], []
+    for seed in range(3):
+        bo = BayesOpt(quad_space(), seed=seed, n_init=5)
+        _, bv = optimize(bo, quad, budget=25)
+        rs = RandomSearch(quad_space(), seed=seed)
+        _, rv = optimize(rs, quad, budget=25)
+        bo_vals.append(bv)
+        rs_vals.append(rv)
+    assert np.median(bo_vals) <= np.median(rs_vals) * 1.5
+    assert min(bo_vals) < 0.05
+
+
+def test_bo_handles_categoricals():
+    space = TunableSpace(
+        [Int("n", 16, 4, 64), Categorical("mode", "a", ("a", "b", "c"))]
+    )
+
+    def obj(cfg):
+        return abs(cfg["n"] - 32) + (0.0 if cfg["mode"] == "b" else 5.0)
+
+    bo = BayesOpt(space, seed=0, n_init=6)
+    cfg, val = optimize(bo, obj, budget=40)
+    assert cfg["mode"] == "b"
+    assert val <= 4
+
+
+def test_grid_search_exhausts():
+    space = TunableSpace([Int("a", 1, 1, 3), Categorical("c", "x", ("x", "y"))])
+    g = GridSearch(space, per_dim=3)
+    cfg, val = optimize(g, lambda c: c["a"], budget=6)
+    assert g.exhausted
+    assert val == 1
+
+
+def test_one_at_a_time_improves_each_coordinate():
+    opt = OneAtATime(quad_space(), seed=3)
+    cfg, val = optimize(opt, quad, budget=60)
+    assert val < 0.5
+
+
+def test_make_optimizer_names():
+    s = quad_space()
+    for name in ("rs", "grid", "oaat", "bo", "bo_rbf", "bo_matern32"):
+        assert make_optimizer(name, s) is not None
+    with pytest.raises(ValueError):
+        make_optimizer("nope", s)
+
+
+def test_trace_monotone():
+    opt = RandomSearch(quad_space(), seed=1)
+    optimize(opt, quad, budget=50)
+    tr = opt.trace()
+    assert all(a >= b for a, b in zip(tr, tr[1:]))

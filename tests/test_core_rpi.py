@@ -1,0 +1,38 @@
+"""RPI envelopes: declaration, checking, persistence, learning from runs."""
+import pytest
+
+from repro.core import RPI, Bound, Tracker, assert_rpi
+
+
+def test_rpi_check_and_assert():
+    rpi = RPI("hashtable", "insert20k", (Bound("time_us", high=1e6), Bound("collisions", high=50000)))
+    ok = rpi.check({"time_us": 1000.0, "collisions": 100})
+    assert ok and ok.checked == 2
+    bad = rpi.check({"time_us": 2e6, "collisions": 100})
+    assert not bad and "time_us" in bad.violations[0]
+    with pytest.raises(AssertionError):
+        assert_rpi(rpi, {"time_us": 2e6, "collisions": 100})
+
+
+def test_rpi_missing_metric_is_violation():
+    rpi = RPI("c", "w", (Bound("m", high=1.0),))
+    rep = rpi.check({})
+    assert not rep and "missing" in rep.violations[0]
+
+
+def test_rpi_save_load(tmp_path):
+    rpi = RPI("comp", "wl", (Bound("x", low=0.0, high=2.0),))
+    rpi.save(root=str(tmp_path))
+    back = RPI.load("comp", "wl", root=str(tmp_path))
+    assert back.bounds[0].metric == "x" and back.bounds[0].high == 2.0
+
+
+def test_rpi_learned_from_tracked_runs(tmp_path):
+    tr = Tracker(root=str(tmp_path))
+    for i, v in enumerate([10.0, 12.0, 11.0]):
+        with tr.start_run("bench", f"r{i}") as run:
+            run.log_metric("time_us", v)
+    rpi = RPI.learn("comp", "wl", tr, "bench", ["time_us"], slack=0.25)
+    assert rpi.check({"time_us": 11.0})
+    assert rpi.check({"time_us": 14.5})  # within +25% of max
+    assert not rpi.check({"time_us": 20.0})

@@ -1,0 +1,96 @@
+"""Unit + property tests for the MLOS tunable/search-space layer."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tunable import Bool, Categorical, Float, Int, Tunable, TunableSpace
+
+
+def make_space():
+    return TunableSpace(
+        [
+            Int("buckets", default=1024, low=16, high=65536, log=True),
+            Float("load", default=0.5, low=0.1, high=0.95),
+            Categorical("probe", default="linear", choices=("linear", "quadratic", "double")),
+            Bool("prefetch", default=False),
+        ]
+    )
+
+
+def test_defaults_and_validate():
+    s = make_space()
+    d = s.defaults()
+    assert d["buckets"] == 1024 and d["probe"] == "linear"
+    v = s.validate({"buckets": 32})
+    assert v["buckets"] == 32 and v["load"] == 0.5
+    with pytest.raises(ValueError):
+        s.validate({"buckets": 7})  # below low
+    with pytest.raises(ValueError):
+        s.validate({"nope": 1})
+
+
+def test_bad_tunables_rejected():
+    with pytest.raises(ValueError):
+        Int("x", default=5, low=10, high=20)
+    with pytest.raises(ValueError):
+        Tunable("x", "categorical", "a", choices=("b", "c"))
+    with pytest.raises(ValueError):
+        Tunable("x", "float", 1.0, low=0.0, high=2.0, log=True)  # log with low<=0
+
+
+def test_sample_in_domain():
+    s = make_space()
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        cfg = s.sample(rng)
+        assert s.validate(cfg) == cfg
+
+
+def test_grid_covers_extremes():
+    s = make_space()
+    g = s.grid(per_dim=3)
+    buckets = {c["buckets"] for c in g}
+    assert 16 in buckets and 65536 in buckets
+    assert len(g) <= 3 * 3 * 3 * 2
+
+
+@given(st.floats(min_value=0.0, max_value=1.0))
+@settings(max_examples=50, deadline=None)
+def test_encode_decode_roundtrip_unit(u):
+    s = make_space()
+    for t in s:
+        v = t.decode(u)
+        u2 = t.encode(v)
+        v2 = t.decode(u2)
+        if t.kind == "float":  # fp round-trip: idempotent to fp tolerance
+            assert math.isclose(v2, v, rel_tol=1e-9, abs_tol=1e-12)
+        else:
+            assert v2 == v  # ints/categoricals: exactly idempotent
+
+
+@given(st.integers(min_value=16, max_value=65536))
+@settings(max_examples=50, deadline=None)
+def test_int_log_encode_monotone(b):
+    t = Int("buckets", default=1024, low=16, high=65536, log=True)
+    u = t.encode(b)
+    assert 0.0 <= u <= 1.0
+    assert t.encode(16) == 0.0 and t.encode(65536) == 1.0
+
+
+def test_space_vector_roundtrip():
+    s = make_space()
+    rng = np.random.default_rng(1)
+    cfg = s.sample(rng)
+    x = s.encode(cfg)
+    assert x.shape == (4,)
+    cfg2 = s.decode(x)
+    assert cfg2 == cfg
+
+
+def test_json_roundtrip():
+    s = make_space()
+    s2 = TunableSpace.from_json(s.to_json())
+    assert s2.names == s.names
+    assert s2.defaults() == s.defaults()

@@ -1,0 +1,135 @@
+"""Multi-device semantics, run in a subprocess with 8 host devices (the main
+test process keeps the real single-device view, per the assignment)."""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def run_devprog(body: str, n_dev: int = 8, timeout: int = 600) -> str:
+    prog = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n_dev}"
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as PS, NamedSharding
+        {textwrap.indent(textwrap.dedent(body), '        ').strip()}
+        print("SUBPROC_OK")
+    """)
+    env = dict(os.environ, PYTHONPATH=str(ROOT / "src"))
+    r = subprocess.run([sys.executable, "-c", prog], capture_output=True, text=True,
+                       timeout=timeout, env=env)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "SUBPROC_OK" in r.stdout
+    return r.stdout
+
+
+def test_ring_allgather_matmul_matches_dense():
+    run_devprog("""
+        from repro.parallel.collectives import ring_allgather_matmul
+        mesh = jax.make_mesh((8,), ("model",), axis_types=(jax.sharding.AxisType.Auto,))
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, (2, 16, 32))
+        w = jax.random.normal(key, (32, 64))
+        want = x @ w
+        got = jax.jit(lambda x, w: ring_allgather_matmul(x, w, mesh))(x, w)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+    """)
+
+
+def test_compressed_psum_pod():
+    run_devprog("""
+        from repro.optim.compress import compressed_psum_pod
+        mesh = jax.make_mesh((8,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,))
+        x = jnp.linspace(-1.0, 1.0, 32).reshape(4, 8)
+        got = jax.jit(lambda x: compressed_psum_pod(x, mesh, "pod"))(x)
+        want = x * 8.0  # replicated input → psum = 8x
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-2, atol=2e-2)
+    """)
+
+
+def test_tiny_dryrun_train_cell_compiles_and_runs():
+    """End-to-end mini dry-run: a reduced config on a (2,4) mesh lowers,
+    compiles AND executes; loss is finite and state stays sharded."""
+    run_devprog("""
+        import dataclasses
+        from repro.configs import get_config
+        from repro.parallel import sharding as shd
+        from repro.runtime import steps as rt
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        cfg = dataclasses.replace(get_config("olmo-1b").reduced(), d_model=64,
+                                  n_heads=4, n_kv_heads=4, head_dim=16).validate()
+        rules = shd.train_rules()
+        state = rt.init_train_state(jax.random.PRNGKey(0), cfg)
+        sspecs = rt.train_state_specs(cfg)
+        shards = shd.tree_shardings(sspecs, rules, mesh)
+        state = jax.device_put(state, shards)
+        batch = {"tokens": jnp.zeros((8, 32), jnp.int32) + 3,
+                 "labels": jnp.ones((8, 32), jnp.int32)}
+        bsh = NamedSharding(mesh, PS("data", "model"))
+        batch = jax.device_put(batch, {"tokens": bsh, "labels": bsh})
+        raw = rt.make_train_step(cfg)
+        def step(s, b, l):
+            with shd.use_rules(mesh, rules):
+                return raw(s, b, l)
+        fn = jax.jit(step, donate_argnums=(0,))
+        state, metrics = fn(state, batch, 1.0)
+        assert np.isfinite(float(metrics["loss"])), metrics
+        state, metrics2 = fn(state, batch, 1.0)
+        assert float(metrics2["loss"]) < float(metrics["loss"]) + 1.0
+    """)
+
+
+def test_tiny_moe_shard_map_matches_single_device():
+    """The shard_map MoE path on a mesh must match the local_tp path 1-device
+    numerics (same dispatch, modulo per-device capacity grouping)."""
+    run_devprog("""
+        import dataclasses
+        from repro.configs import get_config
+        from repro.models import model as M
+        from repro.parallel import sharding as shd
+        cfg = dataclasses.replace(get_config("olmoe-1b-7b").reduced(),
+                                  moe_num_experts=8, moe_top_k=2).validate()
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        batch = {"tokens": jnp.zeros((8, 16), jnp.int32) + 3,
+                 "labels": jnp.ones((8, 16), jnp.int32)}
+        loss1, _ = M.loss_fn(params, cfg, batch)   # no mesh: gather path
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        rules = shd.serve_rules()
+        def f(p, b):
+            with shd.use_rules(mesh, rules):
+                return M.loss_fn(p, b_cfg, b)[0]
+        b_cfg = cfg
+        loss2 = jax.jit(lambda p, b: f(p, b))(params, batch)
+        # capacities differ (global vs per-device) but with cf=1.25 and a tiny
+        # batch almost nothing drops → losses agree to bf16 tolerance
+        assert abs(float(loss1) - float(loss2)) < 0.1, (float(loss1), float(loss2))
+    """)
+
+
+def test_decode_cache_stays_sharded_and_ring_consistent():
+    run_devprog("""
+        import dataclasses
+        from repro.configs import get_config
+        from repro.models import model as M
+        from repro.parallel import sharding as shd
+        cfg = get_config("mixtral-8x22b").reduced().validate()  # windowed arch
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        rules = shd.serve_rules()
+        toks = jnp.zeros((2, 24), jnp.int32) + 5
+        with shd.use_rules(mesh, rules):
+            logits, caches, pos = M.prefill(params, cfg, toks, cache_capacity=64)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            for i in range(3):
+                logits, caches = M.decode_step(params, cfg, tok, caches, pos + i)
+                tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        assert np.isfinite(np.asarray(logits, np.float32)).all()
+    """)

@@ -1,0 +1,162 @@
+"""Per-kernel correctness: Pallas (interpret mode) and jnp variants vs oracles."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ref as attn_ref
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.rmsnorm import ref as rms_ref
+from repro.kernels.rmsnorm.kernel import rmsnorm_pallas
+from repro.kernels.ssd import ref as ssd_ref
+from repro.kernels.ssd.kernel import ssd_pallas
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+
+
+def _mk_qkv(key, b, sq, sk, h, k, d, dtype):
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, sq, h, d), jnp.float32).astype(dtype)
+    kk_ = jax.random.normal(kk, (b, sk, k, d), jnp.float32).astype(dtype)
+    vv = jax.random.normal(kv, (b, sk, k, d), jnp.float32).astype(dtype)
+    return q, kk_, vv
+
+
+# ---------------------------------------------------------------- attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(1, 128, 4, 2, 32), (2, 128, 4, 4, 64)])
+@pytest.mark.parametrize("window", [0, 48])
+def test_flash_pallas_vs_naive(dtype, shape, window):
+    b, s, h, k, d = shape
+    q, kk, vv = _mk_qkv(jax.random.PRNGKey(0), b, s, s, h, k, d, dtype)
+    want = attn_ref.naive_attention(q, kk, vv, causal=True, window=window)
+    got = flash_attention_pallas(q, kk, vv, causal=True, window=window,
+                                 block_q=64, block_kv=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("impl", ["scan", "unrolled"])
+@pytest.mark.parametrize("window", [0, 32])
+@pytest.mark.parametrize("q_offset", [0, 64])
+def test_jnp_impls_vs_naive(impl, window, q_offset):
+    b, h, k, d = 2, 4, 2, 16
+    sk = 128
+    sq = sk - q_offset
+    q, kk, vv = _mk_qkv(jax.random.PRNGKey(1), b, sq, sk, h, k, d, jnp.float32)
+    want = attn_ref.naive_attention(q, kk, vv, causal=True, window=window, q_offset=q_offset)
+    fn = attn_ref.scan_attention if impl == "scan" else attn_ref.unrolled_attention
+    got = fn(q, kk, vv, causal=True, window=window, q_offset=q_offset, block_kv=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_pallas_qoffset():
+    b, h, k, d, sk = 1, 2, 2, 32, 128
+    q_offset = 64
+    q, kk, vv = _mk_qkv(jax.random.PRNGKey(2), b, sk - q_offset, sk, h, k, d, jnp.float32)
+    want = attn_ref.naive_attention(q, kk, vv, causal=True, q_offset=q_offset)
+    got = flash_attention_pallas(q, kk, vv, causal=True, q_offset=q_offset,
+                                 block_q=32, block_kv=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_matches_incremental_naive():
+    b, h, k, d, c = 2, 4, 2, 16, 32
+    key = jax.random.PRNGKey(3)
+    q, kk, vv = _mk_qkv(key, b, c, c, h, k, d, jnp.float32)
+    # full naive on c tokens; compare the last token vs decode_attention
+    want = attn_ref.naive_attention(q, kk, vv, causal=True)[:, -1:]
+    got = attn_ref.decode_attention(q[:, -1:], kk, vv, jnp.asarray(c - 1, jnp.int32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_ring_buffer():
+    """Windowed ring cache must equal full-cache windowed attention."""
+    b, h, k, d, w = 1, 2, 2, 16, 16
+    total = 40  # tokens seen so far; pos = total - 1
+    key = jax.random.PRNGKey(4)
+    q, kk, vv = _mk_qkv(key, b, total, total, h, k, d, jnp.float32)
+    want = attn_ref.naive_attention(q, kk, vv, causal=True, window=w)[:, -1:]
+    # build the ring cache: token t at slot t % w, last w tokens
+    slots = [(total - w + i) for i in range(w)]
+    ring_k = np.zeros((b, w, k, d), np.float32)
+    ring_v = np.zeros((b, w, k, d), np.float32)
+    for t in slots:
+        ring_k[:, t % w] = np.asarray(kk[:, t])
+        ring_v[:, t % w] = np.asarray(vv[:, t])
+    got = attn_ref.decode_attention(q[:, -1:], jnp.asarray(ring_k), jnp.asarray(ring_v),
+                                    jnp.asarray(total - 1, jnp.int32), window=w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------- ssd
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(2, 128, 4, 16, 8, 1), (1, 128, 4, 32, 16, 2)])
+def test_ssd_chunked_vs_naive(dtype, shape):
+    b, s, h, p, n, g = shape
+    key = jax.random.PRNGKey(5)
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h), jnp.float32))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,), jnp.float32) * 0.5)
+    B = jax.random.normal(ks[3], (b, s, g, n), jnp.float32).astype(dtype)
+    C = jax.random.normal(ks[4], (b, s, g, n), jnp.float32).astype(dtype)
+    D = jnp.ones((h,), jnp.float32)
+    want, wstate = ssd_ref.ssd_naive_scan(x, dt, A, B, C, D, return_state=True)
+    got, gstate = ssd_ref.ssd_chunked(x, dt, A, B, C, D, chunk=32, return_state=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32),
+                               **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(gstate), np.asarray(wstate), rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("chunk", [32, 64])
+def test_ssd_pallas_vs_naive(chunk):
+    b, s, h, p, n, g = 1, 128, 2, 16, 8, 1
+    key = jax.random.PRNGKey(6)
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h), jnp.float32))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,), jnp.float32) * 0.5)
+    B = jax.random.normal(ks[3], (b, s, g, n), jnp.float32)
+    C = jax.random.normal(ks[4], (b, s, g, n), jnp.float32)
+    D = jnp.ones((h,), jnp.float32)
+    want = ssd_ref.ssd_naive_scan(x, dt, A, B, C, D)
+    got = ssd_pallas(x, dt, A, B, C, D, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_decode_matches_scan():
+    b, s, h, p, n, g = 2, 16, 2, 8, 4, 1
+    key = jax.random.PRNGKey(7)
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h), jnp.float32))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,), jnp.float32) * 0.5)
+    B = jax.random.normal(ks[3], (b, s, g, n), jnp.float32)
+    C = jax.random.normal(ks[4], (b, s, g, n), jnp.float32)
+    want, _ = ssd_ref.ssd_naive_scan(x, dt, A, B, C, None, return_state=True)
+    state = jnp.zeros((b, h, p, n), jnp.float32)
+    outs = []
+    for t in range(s):
+        y, state = ssd_ref.ssd_decode_step(state, x[:, t], dt[:, t], A, B[:, t], C[:, t], None)
+        outs.append(y)
+    got = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------------------- rmsnorm
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(8, 128), (2, 16, 256)])
+@pytest.mark.parametrize("residual", [False, True])
+def test_rmsnorm_pallas(dtype, shape, residual):
+    key = jax.random.PRNGKey(8)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, shape, jnp.float32).astype(dtype)
+    r = jax.random.normal(k2, shape, jnp.float32).astype(dtype) if residual else None
+    scale = jnp.linspace(0.5, 1.5, shape[-1], dtype=jnp.float32)
+    want = rms_ref.rmsnorm(x, scale, r)
+    got = rmsnorm_pallas(x, scale, r, block_rows=4, interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype))

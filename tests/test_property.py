@@ -1,0 +1,128 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import math
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.core.optimizers import make_optimizer
+from repro.core.tunable import Categorical, Float, Int, TunableSpace
+from repro.data.pipeline import PackedBatcher, SyntheticCorpus
+from repro.kernels.flash_attention import ref as attn_ref
+from repro.launch.specs import depth_units, scaled_config
+from repro.optim.compress import dequantize_int8, quantize_int8
+
+SET = settings(max_examples=25, deadline=None)
+
+
+# ------------------------------------------------------------------- tunables
+@given(st.floats(1e-3, 1e3), st.floats(1.0, 1e4), st.floats(0, 1), st.booleans())
+@SET
+def test_float_tunable_encode_decode_roundtrip(lo, span, u, log):
+    hi = lo + span
+    t = Float("x", default=lo, low=lo, high=hi, log=log and lo > 0)
+    v = t.decode(u)
+    assert lo - 1e-9 <= v <= hi + 1e-9
+    u2 = t.encode(v)
+    v2 = t.decode(u2)
+    assert math.isclose(v, v2, rel_tol=1e-6, abs_tol=1e-9)
+
+
+@given(st.integers(0, 30), st.integers(1, 200), st.floats(0, 1))
+@SET
+def test_int_tunable_decode_in_range(lo, span, u):
+    t = Int("n", default=lo, low=lo, high=lo + span)
+    v = t.decode(u)
+    assert lo <= v <= lo + span and isinstance(v, int)
+
+
+@given(st.integers(0, 2**31), st.integers(2, 6))
+@SET
+def test_space_sample_always_validates(seed, k):
+    space = TunableSpace([
+        Int("a", 4, 1, 64, log=True),
+        Float("b", 0.5, 0.0, 1.0),
+        Categorical("c", "x", tuple("xyz"[:k % 3 + 1])),
+    ])
+    cfg = space.sample(np.random.default_rng(seed))
+    assert space.validate(cfg) == cfg
+
+
+@given(st.sampled_from(["random", "bo_matern32", "grid", "one_at_a_time"]),
+       st.integers(0, 1000))
+@SET
+def test_optimizers_stay_in_domain(name, seed):
+    space = TunableSpace([Int("a", 4, 2, 32), Categorical("c", "u", ("u", "v"))])
+    opt = make_optimizer(name, space, seed=seed)
+    for i in range(6):
+        cfg = opt.ask()
+        assert 2 <= cfg["a"] <= 32 and cfg["c"] in ("u", "v")
+        opt.tell(cfg, float(cfg["a"]) + (0.0 if cfg["c"] == "u" else 1.0))
+    assert opt.best.value <= min(o.value for o in opt.history)
+
+
+# ----------------------------------------------------------------------- data
+@given(st.integers(50, 5000), st.integers(0, 10_000), st.sampled_from([32, 64, 96]))
+@SET
+def test_packing_labels_are_next_token(vocab, seed, seq):
+    b = PackedBatcher(SyntheticCorpus(vocab, seed=seed), 1, seq)
+    x = b.batch_at(seed % 7)
+    toks, labs = x["tokens"][0], x["labels"][0]
+    assert toks.shape == (seq,) and labs.shape == (seq,)
+    assert (toks >= 0).all() and (toks < vocab).all()
+    nz = labs >= 0
+    assert (labs[:-1][nz[:-1]] == toks[1:][nz[:-1]]).all()
+
+
+# ------------------------------------------------------------------- compress
+@given(st.lists(st.floats(-1e4, 1e4, allow_nan=False), min_size=2, max_size=64))
+@SET
+def test_int8_quantization_error_bound(xs):
+    x = jnp.asarray(np.asarray(xs, np.float32))
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, s)) - np.asarray(x))
+    assert err.max() <= float(s) * 0.5 + 1e-5
+
+
+# ------------------------------------------------------------------ attention
+@given(st.integers(1, 2), st.sampled_from([16, 32]), st.integers(1, 2),
+       st.sampled_from([8, 16]), st.integers(0, 24))
+@SET
+def test_scan_matches_naive_attention(b, s, g, d, window):
+    k = 2
+    h = k * g
+    key = jax.random.PRNGKey(b * 100 + s + window)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, s, h, d))
+    kk_ = jax.random.normal(kk, (b, s, k, d))
+    vv = jax.random.normal(kv, (b, s, k, d))
+    want = attn_ref.naive_attention(q, kk_, vv, causal=True, window=window)
+    got = attn_ref.scan_attention(q, kk_, vv, causal=True, window=window, block_kv=8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)
+
+
+# --------------------------------------------------------------------- config
+@given(st.sampled_from(ALL_ARCHS), st.integers(1, 4), st.integers(5, 8))
+@SET
+def test_param_count_linear_in_depth_units(arch, k1, k2):
+    """The dry-run's linear counter extrapolation is exact iff parameters are
+    linear in depth units — assert that invariant for every arch."""
+    cfg = get_config(arch)
+    c1 = scaled_config(cfg, k1).param_count()
+    c2 = scaled_config(cfg, k2).param_count()
+    per = (c2 - c1) / (k2 - k1)
+    k_full = depth_units(cfg)
+    extrap = c1 + (k_full - k1) * per
+    assert abs(extrap - cfg.param_count()) < 1e-6 * cfg.param_count() + 1
+
+
+@given(st.sampled_from(ALL_ARCHS))
+@SET
+def test_cache_len_bounded_by_window(arch):
+    cfg = get_config(arch)
+    if cfg.n_heads:
+        assert cfg.cache_len(1 << 20) == (cfg.window if cfg.window else 1 << 20)

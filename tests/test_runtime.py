@@ -1,0 +1,143 @@
+"""Runtime substrate: checkpoint atomicity/resume, fault policy, elastic replan,
+data pipeline determinism, loss-decrease integration."""
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.pipeline import PackedBatcher, SyntheticCorpus
+from repro.runtime.checkpoint import (AsyncCheckpointer, latest_step,
+                                      restore_checkpoint, save_checkpoint)
+from repro.runtime.elastic import usable_factorization
+from repro.runtime.fault import HeartbeatMonitor, RestartPolicy, StragglerDetector
+from repro.runtime.steps import init_train_state, make_train_step
+from repro.runtime.train_loop import run_training
+
+
+# ------------------------------------------------------------------ checkpoint
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3), "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+    save_checkpoint(str(tmp_path), 7, tree, extra={"note": "x"})
+    assert latest_step(str(tmp_path)) == 7
+    restored, manifest = restore_checkpoint(str(tmp_path), tree)
+    assert manifest["step"] == 7 and manifest["extra"]["note"] == "x"
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(tree["a"]))
+    assert restored["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_atomic_no_partial(tmp_path):
+    tree = {"x": jnp.zeros((8,))}
+    save_checkpoint(str(tmp_path), 1, tree)
+    # only final dirs are visible, no .tmp litter
+    names = [p.name for p in tmp_path.iterdir()]
+    assert names == ["step_00000001"]
+    assert (tmp_path / "step_00000001" / "manifest.json").exists()
+
+
+def test_async_checkpointer_gc_and_wait(tmp_path):
+    ck = AsyncCheckpointer(str(tmp_path), max_to_keep=2)
+    for s in range(4):
+        ck.save(s, {"w": jnp.full((4,), s)})
+    ck.wait()
+    steps = sorted(int(d.name.split("_")[1]) for d in tmp_path.iterdir())
+    assert steps == [2, 3]
+
+
+def test_restore_resharded_dtype_cast(tmp_path):
+    tree = {"w": jnp.ones((8, 4), jnp.float32)}
+    save_checkpoint(str(tmp_path), 0, tree)
+    template = {"w": jnp.zeros((8, 4), jnp.bfloat16)}
+    restored, _ = restore_checkpoint(str(tmp_path), template)
+    assert restored["w"].dtype == jnp.bfloat16
+
+
+# ----------------------------------------------------------------------- fault
+def test_heartbeat_detects_dead_and_recovery():
+    hb = HeartbeatMonitor(n_hosts=3, timeout_s=10.0)
+    for h in range(3):
+        hb.beat(h, now=0.0)
+    assert hb.check(now=5.0) == []
+    hb.beat(0, now=11.0)
+    hb.beat(1, now=11.0)
+    events = hb.check(now=12.0)
+    assert [e.host for e in events if e.kind == "dead"] == [2]
+    ev = hb.beat(2, now=13.0)
+    assert ev.kind == "recovered"
+
+
+def test_straggler_detection():
+    sd = StragglerDetector(n_hosts=4, factor=1.5, min_steps=4)
+    for step in range(8):
+        for h in range(4):
+            sd.record(h, step, 1.0 if h != 3 else 2.5)
+    out = sd.stragglers()
+    assert [e.host for e in out] == [3]
+
+
+def test_restart_policy_escalation():
+    rp = RestartPolicy(max_restarts=2)
+    a1 = rp.next_action(spare_hosts=1)
+    assert a1["action"] == "restart_with_spare"
+    a2 = rp.next_action(spare_hosts=0)
+    assert a2["action"] == "elastic_downscale"
+    assert rp.next_action(spare_hosts=1)["action"] == "abort"
+
+
+# --------------------------------------------------------------------- elastic
+@pytest.mark.parametrize("n,prefer,expect", [
+    (512, 16, (32, 16)), (256, 16, (16, 16)), (240, 16, (15, 16)),
+    (252, 16, (18, 14)), (7, 16, (1, 7)), (1, 16, (1, 1)),
+])
+def test_usable_factorization(n, prefer, expect):
+    assert usable_factorization(n, prefer) == expect
+
+
+# ------------------------------------------------------------------------ data
+def test_batcher_deterministic_and_resumable():
+    c = SyntheticCorpus(vocab_size=1000, seed=3)
+    b1 = PackedBatcher(c, global_batch=4, seq_len=64)
+    b2 = PackedBatcher(c, global_batch=4, seq_len=64)
+    x1, x2 = b1.batch_at(5), b2.batch_at(5)
+    np.testing.assert_array_equal(x1["tokens"], x2["tokens"])
+    np.testing.assert_array_equal(x1["labels"], x2["labels"])
+    # different steps differ
+    assert not np.array_equal(b1.batch_at(6)["tokens"], x1["tokens"])
+
+
+def test_batcher_host_slicing():
+    c = SyntheticCorpus(vocab_size=1000, seed=3)
+    full = PackedBatcher(c, 8, 32).batch_at(0)
+    lo = PackedBatcher(c, 8, 32, host_slice=(0, 4)).batch_at(0)
+    hi = PackedBatcher(c, 8, 32, host_slice=(4, 8)).batch_at(0)
+    np.testing.assert_array_equal(np.concatenate([lo["tokens"], hi["tokens"]]), full["tokens"])
+
+
+def test_labels_are_next_token_within_doc():
+    c = SyntheticCorpus(vocab_size=100, seed=0)
+    b = PackedBatcher(c, 1, 128)
+    x = b.batch_at(0)
+    toks, labs = x["tokens"][0], x["labels"][0]
+    for i in range(127):
+        if labs[i] >= 0:
+            assert labs[i] == toks[i + 1]
+
+
+# ------------------------------------------------------------------ train loop
+def test_training_decreases_loss_and_resumes(tmp_path):
+    from repro.runtime.steps import TrainHyper
+
+    cfg = get_config("olmo-1b").reduced().validate()
+    hyper = TrainHyper(base_lr=5e-3, warmup=2, total=50)
+    out = run_training(cfg, n_steps=8, global_batch=4, seq_len=32, hyper=hyper,
+                       ckpt_dir=str(tmp_path / "ck"), ckpt_every=4, seed=0)
+    losses = [h["loss"] for h in out["history"]]
+    assert losses[-1] < losses[0]  # random-init next-token loss drops fast
+    # resume: continues from the checkpoint, not from scratch
+    out2 = run_training(cfg, n_steps=10, global_batch=4, seq_len=32, hyper=hyper,
+                        ckpt_dir=str(tmp_path / "ck"), ckpt_every=4, seed=0)
+    assert len(out2["history"]) == 2  # steps 8..9 only
+    assert int(out2["state"]["step"]) == 10
