@@ -1,0 +1,135 @@
+"""Multi-instance tuning: one agent daemon vs one-daemon-per-instance.
+
+The paper's production claim (§2.1) is *instance-level* tuning at scale: a
+single MLOS agent side-car concurrently drives a custom optimization per live
+component instance.  This benchmark tunes N hash-table instances — distinct
+workloads, so distinct optima — two ways:
+
+  * **baseline**: N sequential single-session agent runs (the pre-multiplex
+    shape: one daemon per instance),
+  * **multiplexed**: ONE :class:`AgentProcess` hosting all N sessions over
+    ONE shared-memory channel, telemetry demuxed by instance id.
+
+Objective is ``collisions`` (deterministic given the workload seed), so the
+multiplexed bests must match the baselines exactly — the headline result is
+the daemon count (N→1) at identical tuning quality.  The wall-clock lines are
+context only: the baseline is in-process (no spawn, no channel, no poll
+sleeps), so it is a floor, not a daemons-vs-daemon timing comparison.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Any, Dict
+
+from repro.core import AgentClient, AgentProcess, MlosChannel, TrackedInstance, TuningSession, drive_session, pack_telemetry
+from repro.core.registry import get_component
+from repro.core.smartcomponents import TunableHashTable, hashtable_workload
+
+INSTANCES = {
+    0: dict(name="OpenRowSet", n_keys=3000, lookup_ratio=4.0, skew=0.0, seed=1),
+    1: dict(name="BufferManager", n_keys=3000, lookup_ratio=4.0, skew=1.2, seed=2),
+    2: dict(name="SessionCache", n_keys=1200, lookup_ratio=1.5, skew=0.5, seed=3),
+    3: dict(name="LockTable", n_keys=600, lookup_ratio=8.0, skew=0.0, seed=4),
+}
+BUDGET = 16
+OPTIMIZER = "rs"
+
+
+def _measure(table: TunableHashTable, iid: int) -> Dict[str, float]:
+    wl = {k: v for k, v in INSTANCES[iid].items() if k != "name"}
+    return hashtable_workload(table, **wl)
+
+
+def _sessions():
+    meta = get_component("hashtable")
+    return [
+        TuningSession.for_component(
+            meta, objective="collisions", optimizer=OPTIMIZER,
+            budget=BUDGET, seed=100 + iid, instance_id=iid,
+        )
+        for iid in INSTANCES
+    ]
+
+
+def run_baseline() -> Dict[int, float]:
+    """One agent run per instance, sequentially (in-process deterministic twin
+    of spawning N daemons — same cores, same seeds, no channel overhead)."""
+    best: Dict[int, float] = {}
+    for s in _sessions():
+        table = TunableHashTable()
+
+        def measure(settings: Dict[str, Any], table=table, iid=s.instance_id) -> Dict[str, float]:
+            table.apply_and_rebuild(settings)
+            return _measure(table, iid)
+
+        best[s.instance_id] = drive_session(s, measure).best.value
+    return best
+
+
+def run_multiplexed() -> Dict[int, Dict[str, Any]]:
+    """All instances behind one AgentProcess + one MlosChannel."""
+    meta = get_component("hashtable")
+    chan = MlosChannel.create(capacity=1 << 16)
+    try:
+        agent = AgentProcess(chan, _sessions()).start()
+        client = AgentClient(chan)
+        tracked = {iid: TrackedInstance(TunableHashTable()) for iid in INSTANCES}
+        for iid, t in tracked.items():
+            client.register("hashtable", t, instance_id=iid)
+        deadline = time.time() + 120.0
+        while len(client.reports) < len(INSTANCES) and time.time() < deadline:
+            client.poll(wait_s=0.002, deadline_s=5.0)
+            for iid, t in tracked.items():
+                if t.dirty:
+                    t.dirty = False
+                    chan.telemetry.push(pack_telemetry(meta, iid, _measure(t.instance, iid)))
+        agent.stop()
+        return {
+            iid: client.report_for("hashtable", iid) or {}
+            for iid in INSTANCES
+        }
+    finally:
+        chan.close()
+
+
+def main() -> Dict[str, Any]:
+    t0 = time.time()
+    baseline = run_baseline()
+    t_base = time.time() - t0
+    t0 = time.time()
+    mux = run_multiplexed()
+    t_mux = time.time() - t0
+
+    res: Dict[str, Any] = {
+        "budget": BUDGET,
+        "optimizer": OPTIMIZER,
+        "baseline_wall_s": t_base,
+        "multiplexed_wall_s": t_mux,
+        "instances": {},
+    }
+    print(f"multi-instance tuning: {len(INSTANCES)} hash-table instances, "
+          f"budget {BUDGET}/instance, one agent daemon vs {len(INSTANCES)}")
+    print(f"  wall: in-process baseline={t_base:.1f}s (no daemon/channel — a floor)  "
+          f"multiplexed daemon={t_mux:.1f}s (incl. ~1s spawn)")
+    for iid, wl in INSTANCES.items():
+        rep = mux[iid]
+        b = baseline[iid]
+        m = rep.get("best_value")
+        ok = m is not None and m <= b
+        res["instances"][wl["name"]] = {
+            "baseline_best": b, "multiplexed_best": m,
+            "evaluations": rep.get("evaluations"), "no_worse": ok,
+            "best_config": rep.get("best_config"),
+        }
+        print(f"  {wl['name']:14s} baseline={b:10.0f}  multiplexed={m if m is not None else float('nan'):10.0f}"
+              f"  evals={rep.get('evaluations')}  {'OK' if ok else 'WORSE'}")
+    out = Path("results/bench")
+    out.mkdir(parents=True, exist_ok=True)
+    (out / "multi_instance.json").write_text(json.dumps(res, indent=1))
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -10,7 +10,7 @@ import time
 
 
 def main() -> int:
-    from . import fig3_hashtable, fig4_counters, fig5_spinlock, kernel_autotune, roofline_table
+    from . import fig3_hashtable, fig4_counters, fig5_spinlock, kernel_autotune, multi_instance, roofline_table
 
     t0 = time.time()
     print("=" * 72)
@@ -20,6 +20,7 @@ def main() -> int:
         ("fig3_hashtable", fig3_hashtable),
         ("fig4_counters", fig4_counters),
         ("fig5_spinlock", fig5_spinlock),
+        ("multi_instance", multi_instance),
         ("kernel_autotune", kernel_autotune),
         ("roofline_table", roofline_table),
     ]:

@@ -53,7 +53,9 @@ def main() -> None:
     client.register("flash_attention", attn_ops.attention_settings)
     emitter = TelemetryEmitter(meta, channel)
 
-    client.poll(deadline_s=5.0)  # receive the agent's first proposal
+    # Block until the agent's first proposal lands (the spawn-context agent
+    # takes ~1s to come up; wait_s=0 would return immediately and lose the race).
+    client.poll(wait_s=0.002, deadline_s=20.0)
     print(f"autotuning flash_attention over {BUDGET} configs "
           f"(agent pid runs separately, telemetry over shm ring)")
     base = measure(meta.space.defaults())
@@ -63,7 +65,7 @@ def main() -> None:
         print(f"  [{it:2d}] impl={s['impl']:<13s} bq={s['block_q']:<5d} bkv={s['block_kv']:<5d}"
               f" → {t:7.0f} us")
         emitter.emit({"time_us": t, "hlo_flops": 0.0, "hlo_bytes": 0.0})
-        got = client.poll(deadline_s=5.0)
+        got = client.poll(wait_s=0.002, deadline_s=5.0)
         if got == 0:
             break
     agent.stop()

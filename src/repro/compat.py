@@ -1,0 +1,90 @@
+"""JAX version-compatibility layer — one place that absorbs API drift.
+
+The repo targets the installed JAX (0.4.37 in this container) *and* the
+modern ≥0.5 API, whose mesh constructors changed shape twice:
+
+  * ``jax.make_mesh(shape, axes)`` grew an ``axis_types=`` kwarg and the
+    public ``jax.sharding.AxisType`` enum (0.4.x has only the private
+    ``jax._src.mesh.AxisTypes``, and ``make_mesh`` rejects the kwarg);
+  * ``jax.sharding.AbstractMesh`` flipped from the 0.4.x pair signature
+    ``AbstractMesh((("data", 16), ("model", 16)))`` to the positional
+    ``AbstractMesh((16, 16), ("data", "model"))``.
+
+Per Performance-oriented-DevOps doctrine (and the MLOS paper's "context
+changes ⇒ repeated work" complaint), version probes live *here only*:
+``launch/mesh.py``, ``parallel/sharding.py``, and the distributed/sharding
+tests all build meshes through these helpers, so the next JAX bump is a
+one-file patch.  Everything is feature-detected (try/except), never
+version-string compared, so unreleased intermediates also work.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import AbstractMesh, Mesh
+
+__all__ = ["axis_type_auto", "make_mesh", "abstract_mesh", "mesh_axis_sizes", "shard_map"]
+
+
+def axis_type_auto() -> Optional[Any]:
+    """The public ``AxisType.Auto`` enum member, or ``None`` where the enum
+    does not exist (≤0.4.x — mesh axes are implicitly auto there)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    return axis_type.Auto if axis_type is not None else None
+
+
+def make_mesh(
+    shape: Sequence[int],
+    axes: Sequence[str],
+    *,
+    devices: Optional[Sequence[Any]] = None,
+) -> Mesh:
+    """``jax.make_mesh`` across versions; axes are always Auto-typed."""
+    kwargs: Dict[str, Any] = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    auto = axis_type_auto()
+    if auto is not None:
+        try:
+            return jax.make_mesh(tuple(shape), tuple(axes),
+                                 axis_types=(auto,) * len(tuple(axes)), **kwargs)
+        except TypeError:  # enum exists but make_mesh predates the kwarg
+            pass
+    return jax.make_mesh(tuple(shape), tuple(axes), **kwargs)
+
+
+def abstract_mesh(shape: Sequence[int], axes: Sequence[str]) -> AbstractMesh:
+    """``AbstractMesh`` across the positional (≥0.5) / pair (0.4.x) signatures."""
+    shape = tuple(shape)
+    axes = tuple(axes)
+    try:
+        return AbstractMesh(shape, axes)
+    except TypeError:
+        return AbstractMesh(tuple(zip(axes, shape)))
+
+
+def mesh_axis_sizes(mesh: Any) -> Dict[str, int]:
+    """``{axis_name: size}`` for Mesh and AbstractMesh alike, all versions.
+
+    ``mesh.shape`` is an (Ordered)dict on every lineage so far; the
+    ``shape_tuple`` fallback guards against it becoming a bare tuple.
+    """
+    try:
+        return dict(mesh.shape)  # (Ordered)dict / mapping-like
+    except (TypeError, ValueError):
+        return {name: size for name, size in mesh.shape_tuple}
+
+
+def shard_map(f: Any, *, mesh: Any, in_specs: Any, out_specs: Any,
+              check_vma: bool = True) -> Any:
+    """``jax.shard_map`` (≥0.5, ``check_vma=``) or the 0.4.x
+    ``jax.experimental.shard_map.shard_map`` (``check_rep=`` — same switch,
+    renamed when replication checking became varying-manual-axes checking)."""
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as fn_old
+    return fn_old(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check_vma)

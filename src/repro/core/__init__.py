@@ -11,7 +11,7 @@ Layers (paper §2.1):
   optimizers        — RandomSearch / Grid / One-at-a-time / GP-BO (Matern-3/2)
   smartcomponents   — paper-faithful demo components (hashtable, spinlock)
 """
-from .agent import AgentClient, AgentCore, AgentProcess, TuningSession
+from .agent import AgentClient, AgentCore, AgentMux, AgentProcess, TrackedInstance, TuningSession, drive_session
 from .channel import MlosChannel, ShmRing
 from .codegen import generate_source, load_generated, pack_telemetry, unpack_telemetry
 from .registry import MetricSpec, all_components, get_component, tunable_component
@@ -21,7 +21,8 @@ from .tracking import Tracker
 from .tunable import Bool, Categorical, Float, Int, Tunable, TunableSpace
 
 __all__ = [
-    "AgentClient", "AgentCore", "AgentProcess", "TuningSession",
+    "AgentClient", "AgentCore", "AgentMux", "AgentProcess", "TrackedInstance",
+    "TuningSession", "drive_session",
     "MlosChannel", "ShmRing",
     "generate_source", "load_generated", "pack_telemetry", "unpack_telemetry",
     "MetricSpec", "all_components", "get_component", "tunable_component",

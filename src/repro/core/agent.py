@@ -4,40 +4,62 @@ Paper §2.1 steps 4–5: models and optimizations are *deployed into the agent*,
 which performs online inference on live telemetry and sends parameter-update
 commands back over the shared-memory channel; the hooks enact them.
 
-Two drivers share one deterministic core:
+Three drivers share one deterministic core:
 
-  * :class:`AgentCore` — pure logic: consume telemetry, aggregate per-config
-    samples, step the optimizer, produce config-update commands.  Used
-    in-process for tests and for the notebook-style developer loop.
-  * :func:`agent_main` / :class:`AgentProcess` — run the core in a separate
-    OS process attached to the shared-memory channel (the production shape).
+  * :class:`AgentCore` — pure logic for ONE tuning session: consume telemetry,
+    aggregate per-config samples, step the optimizer, produce config-update
+    commands.  Used in-process for tests and the notebook-style developer loop.
+  * :class:`AgentMux` — N cores behind one telemetry stream.  The paper's
+    agent is *instance-level*: one daemon concurrently tunes every annotated
+    component instance in the process (§2.1 — e.g. each hash-table instance
+    inside SQL Server gets its own custom tune).  The mux demultiplexes packed
+    telemetry by the ``(component_id, instance_id)`` header and schedules
+    ask/tell across the sessions independently.
+  * :func:`agent_main` / :class:`AgentProcess` — run a mux in a separate OS
+    process attached to the shared-memory channel (the production shape).
+    Telemetry is drained in batches per poll (``ShmRing.drain``), not
+    one-pop-one-sleep, so N interleaved sessions don't multiply wakeups.
+
+Wire protocol (JSON over the control ring, packed structs on telemetry):
+
+  * ``config_update``  {component, instance, settings} — host applies
+    ``settings`` to the addressed instance's hooks.
+  * ``session_report`` {component, instance, best_config, best_value,
+    evaluations} — emitted per session the moment it exhausts its budget
+    (and, best-so-far, on early STOP), so the host can act on finished
+    sessions while others continue.
 
 Everything the agent needs (schemas, spaces, objective) travels in a
 JSON-serializable :class:`TuningSession`, so the agent process does not import
-the host system's modules — the decoupling the paper insists on.
+the host system's modules — the decoupling the paper insists on.  The agent
+process is started with the ``spawn`` multiprocessing context: the host
+typically has a multithreaded JAX runtime loaded, and forking that is a
+latent deadlock (CPython emits a RuntimeWarning for exactly this).
 """
 from __future__ import annotations
 
 import dataclasses
 import json
+import multiprocessing
 import struct
 import time
-from multiprocessing import Process
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
 from .channel import MlosChannel
 from .optimizers import make_optimizer
 from .registry import ComponentMeta, MetricSpec
 from .tunable import TunableSpace
 
-__all__ = ["TuningSession", "AgentCore", "AgentProcess", "AgentClient"]
+__all__ = ["TuningSession", "AgentCore", "AgentMux", "AgentProcess", "AgentClient",
+           "TrackedInstance", "drive_session"]
 
 _CONTROL_STOP = b"\x00STOP"
+_HEADER = struct.Struct("<II")  # (component_id, instance_id) telemetry prefix
 
 
 @dataclasses.dataclass
 class TuningSession:
-    """Everything the agent needs to tune one component instance."""
+    """Everything the agent needs to tune one component *instance*."""
 
     component: str
     component_id: int
@@ -45,6 +67,7 @@ class TuningSession:
     metric_names: List[str]
     space_json: List[Dict[str, Any]]
     objective: str
+    instance_id: int = 0
     mode: str = "min"  # 'min' | 'max'
     optimizer: str = "bo"
     samples_per_config: int = 1
@@ -79,26 +102,50 @@ class TuningSession:
                    space_json=space.to_json(), objective=objective, **kw)
 
 
+def sessions_to_json(sessions: Iterable[TuningSession]) -> str:
+    return json.dumps([dataclasses.asdict(s) for s in sessions])
+
+
+def sessions_from_json(s: str) -> List[TuningSession]:
+    """Parse one session (legacy) or a list of sessions."""
+    obj = json.loads(s)
+    if isinstance(obj, dict):
+        obj = [obj]
+    return [TuningSession(**d) for d in obj]
+
+
 class AgentCore:
-    """Deterministic agent logic: telemetry in, config-update commands out."""
+    """Deterministic agent logic for one session: telemetry in, commands out."""
 
     def __init__(self, session: TuningSession):
         self.session = session
         self.space = TunableSpace.from_json(session.space_json)
         self.opt = make_optimizer(session.optimizer, self.space, seed=session.seed)
+        # 0 for 'direct' sessions (metric_fmt="" — no packed telemetry)
+        self.payload_size = struct.calcsize(session.metric_fmt) if session.metric_fmt else 0
         self._pending_cfg: Optional[Dict[str, Any]] = None
         self._samples: List[float] = []
         self.evaluations = 0
         self.done = False
 
     # -- protocol ------------------------------------------------------------
+    @property
+    def key(self) -> Tuple[int, int]:
+        """The telemetry demux key of this session."""
+        return (self.session.component_id, self.session.instance_id)
+
     def start_command(self) -> bytes:
         """First command: put the system on the optimizer's first proposal."""
         self._pending_cfg = self.opt.ask()
         return self._command(self._pending_cfg)
 
     def _command(self, cfg: Dict[str, Any]) -> bytes:
-        msg = {"type": "config_update", "component": self.session.component, "settings": cfg}
+        msg = {
+            "type": "config_update",
+            "component": self.session.component,
+            "instance": self.session.instance_id,
+            "settings": cfg,
+        }
         return json.dumps(msg).encode()
 
     def observe(self, payload: bytes) -> Optional[bytes]:
@@ -106,7 +153,7 @@ class AgentCore:
         if self.done or self._pending_cfg is None:
             return None
         vals = struct.unpack(self.session.metric_fmt, payload)
-        if vals[0] != self.session.component_id:
+        if (vals[0], vals[1]) != self.key:
             return None  # not ours
         metrics = dict(zip(self.session.metric_names, vals[2:]))
         v = float(metrics[self.session.objective])
@@ -127,6 +174,22 @@ class AgentCore:
             return self._command(best.config)  # park system on the best config
         self._pending_cfg = self.opt.ask()
         return self._command(self._pending_cfg)
+
+    def session_report(self) -> Optional[bytes]:
+        """Final per-session summary for the host (None before any tell)."""
+        best = self.opt.best
+        if best is None:
+            return None
+        return json.dumps(
+            {
+                "type": "session_report",
+                "component": self.session.component,
+                "instance": self.session.instance_id,
+                "best_config": best.config,
+                "best_value": best.value,
+                "evaluations": self.evaluations,
+            }
+        ).encode()
 
     # -- in-process variant (no channel) --------------------------------------
     def ask(self) -> Dict[str, Any]:
@@ -154,48 +217,128 @@ class AgentCore:
         return self.opt.best
 
 
-def agent_main(telemetry_name: str, control_name: str, session_json: str, poll_s: float = 0.0005) -> None:
-    """Entry point of the agent process."""
+class AgentMux:
+    """N concurrent :class:`AgentCore` sessions behind one telemetry stream.
+
+    Telemetry records are routed by their ``(component_id, instance_id)``
+    header; each session steps its own optimizer independently, so a slow
+    session never stalls the others.  Records for unregistered instances are
+    counted (``unrouted``) and dropped — the paper's drop-not-block stance.
+    """
+
+    def __init__(self, sessions: Sequence[TuningSession]):
+        self.cores: Dict[Tuple[int, int], AgentCore] = {}
+        for s in sessions:
+            core = AgentCore(s)
+            if core.key in self.cores:
+                raise ValueError(f"duplicate session key {core.key} ({s.component})")
+            self.cores[core.key] = core
+        self._reported: set = set()
+        self.unrouted = 0
+
+    @property
+    def done(self) -> bool:
+        return all(c.done for c in self.cores.values())
+
+    def start_commands(self) -> List[bytes]:
+        return [c.start_command() for c in self.cores.values()]
+
+    def observe(self, payload: bytes) -> List[bytes]:
+        """Route one record; returns messages to push (commands + reports)."""
+        if len(payload) < _HEADER.size:
+            self.unrouted += 1
+            return []
+        core = self.cores.get(_HEADER.unpack_from(payload, 0))
+        if core is None or len(payload) != core.payload_size:
+            # Unknown instance OR malformed frame for a known one: a truncated
+            # record must not raise out of the daemon's poll loop.
+            self.unrouted += 1
+            return []
+        out: List[bytes] = []
+        cmd = core.observe(payload)
+        if cmd is not None:
+            out.append(cmd)
+        if core.done and core.key not in self._reported:
+            rep = core.session_report()
+            if rep is not None:
+                self._reported.add(core.key)
+                out.append(rep)
+        return out
+
+    def final_reports(self) -> List[bytes]:
+        """Best-so-far reports for sessions not yet reported (early STOP)."""
+        out: List[bytes] = []
+        for key, core in self.cores.items():
+            if key in self._reported:
+                continue
+            rep = core.session_report()
+            if rep is not None:
+                self._reported.add(key)
+                out.append(rep)
+        return out
+
+
+def agent_main(
+    telemetry_name: str,
+    control_name: str,
+    sessions_json: str,
+    poll_s: float = 0.0005,
+    drain_batch: int = 256,
+) -> None:
+    """Entry point of the agent process: one mux over the duplex channel.
+
+    Each idle poll sleeps once and then drains up to ``drain_batch`` records
+    in one pass — under N interleaved sessions the per-record overhead is a
+    dict lookup, not a syscall + sleep.
+    """
     chan = MlosChannel.attach(telemetry_name, control_name)
-    core = AgentCore(TuningSession.from_json(session_json))
-    chan.control.push(core.start_command())
+    mux = AgentMux(sessions_from_json(sessions_json))
     try:
-        while not core.done:
-            payload = chan.telemetry.pop()
-            if payload is None:
+        for cmd in mux.start_commands():
+            chan.control.push(cmd)
+        stopped = False
+        while not mux.done and not stopped:
+            batch = chan.telemetry.drain(limit=drain_batch)
+            if not batch:
                 time.sleep(poll_s)
                 continue
-            if payload == _CONTROL_STOP:
-                break
-            cmd = core.observe(payload)
-            if cmd is not None:
-                chan.control.push(cmd)
-        # Final report for the host (best config + value) as a control message.
-        if core.best is not None:
-            chan.control.push(
-                json.dumps(
-                    {
-                        "type": "session_report",
-                        "component": core.session.component,
-                        "best_config": core.best.config,
-                        "best_value": core.best.value,
-                        "evaluations": core.evaluations,
-                    }
-                ).encode()
-            )
+            for payload in batch:
+                if payload == _CONTROL_STOP:
+                    stopped = True
+                    break
+                for msg in mux.observe(payload):
+                    chan.control.push(msg)
+        for rep in mux.final_reports():
+            chan.control.push(rep)
     finally:
         chan.telemetry.close()
         chan.control.close()
 
 
 class AgentProcess:
-    """Host-side handle that launches/stops the agent daemon."""
+    """Host-side handle that launches/stops the (multi-session) agent daemon.
 
-    def __init__(self, channel: MlosChannel, session: TuningSession):
+    Accepts one session or a sequence — the daemon multiplexes them all over
+    the single channel.  Started via the ``spawn`` context: the host process
+    usually holds a multithreaded JAX runtime, which ``os.fork()`` would
+    clone into a deadlock-prone child.
+    """
+
+    def __init__(
+        self,
+        channel: MlosChannel,
+        sessions: Union[TuningSession, Sequence[TuningSession]],
+        mp_context: str = "spawn",
+    ):
         self.channel = channel
-        self.session = session
+        if isinstance(sessions, TuningSession):
+            sessions = [sessions]
+        self.sessions = list(sessions)
         tele, ctrl = channel.names
-        self.proc = Process(target=agent_main, args=(tele, ctrl, session.to_json()), daemon=True)
+        ctx = multiprocessing.get_context(mp_context)
+        self.proc = ctx.Process(
+            target=agent_main, args=(tele, ctrl, sessions_to_json(self.sessions)), daemon=True
+        )
 
     def start(self) -> "AgentProcess":
         self.proc.start()
@@ -209,16 +352,68 @@ class AgentProcess:
             self.proc.join(timeout)
 
 
+def drive_session(session: TuningSession, measure: Any) -> AgentCore:
+    """Drive ONE session to completion in-process through the packed-telemetry
+    protocol — the deterministic single-session twin of an :class:`AgentProcess`
+    (same core, same seeds, no channel).  ``measure(settings)`` applies the
+    proposed settings to the live component and returns its metric dict.
+    Used as the baseline against the multiplexed daemon in tests and
+    ``benchmarks/multi_instance.py``.
+    """
+    core = AgentCore(session)
+    fmt = struct.Struct(session.metric_fmt)
+    cmd = json.loads(core.start_command().decode())
+    while not core.done:
+        metrics = measure(cmd["settings"])
+        payload = fmt.pack(session.component_id, session.instance_id,
+                           *[metrics[n] for n in session.metric_names])
+        nxt = core.observe(payload)
+        if nxt is not None:
+            cmd = json.loads(nxt.decode())
+    return core
+
+
+class TrackedInstance:
+    """Host-side wrapper for the multiplexed drive loop: remembers that a
+    config landed (``dirty``) so the driver knows this instance needs a fresh
+    measurement + telemetry emit.  Register it with :class:`AgentClient` in
+    place of the bare component."""
+
+    def __init__(self, instance: Any, rebuild: bool = True):
+        self.instance = instance
+        self._rebuild = rebuild and hasattr(instance, "apply_and_rebuild")
+        self.dirty = False
+
+    def apply_settings(self, settings: Dict[str, Any]) -> None:
+        if self._rebuild:
+            self.instance.apply_and_rebuild(settings)
+        else:
+            self.instance.apply_settings(settings)
+        self.dirty = True
+
+
 class AgentClient:
-    """System-side: applies agent commands to live component instances."""
+    """System-side: applies agent commands to live component instances.
+
+    Instances are keyed by ``(component_name, instance_id)`` so one client
+    can host many instances of the same component, each driven by its own
+    agent session (the paper's instance-level tuning).  ``register(name,
+    inst)`` without an id keeps the legacy single-instance shape (id 0).
+    """
 
     def __init__(self, channel: MlosChannel):
         self.channel = channel
-        self._instances: Dict[str, Any] = {}
+        self._instances: Dict[Tuple[str, int], Any] = {}
         self.reports: List[Dict[str, Any]] = []
 
-    def register(self, name: str, instance: Any) -> None:
-        self._instances[name] = instance
+    def register(self, name: str, instance: Any, instance_id: int = 0) -> None:
+        self._instances[(name, instance_id)] = instance
+
+    def report_for(self, name: str, instance_id: int = 0) -> Optional[Dict[str, Any]]:
+        for rep in self.reports:
+            if rep["component"] == name and rep.get("instance", 0) == instance_id:
+                return rep
+        return None
 
     def poll(self, wait_s: float = 0.0, deadline_s: float = 1.0) -> int:
         """Apply pending config updates; optionally block until one arrives."""
@@ -233,7 +428,7 @@ class AgentClient:
                 return applied
             msg = json.loads(payload.decode())
             if msg["type"] == "config_update":
-                inst = self._instances.get(msg["component"])
+                inst = self._instances.get((msg["component"], msg.get("instance", 0)))
                 if inst is not None:
                     inst.apply_settings(msg["settings"])
                     applied += 1

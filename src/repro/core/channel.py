@@ -119,12 +119,31 @@ class ShmRing:
             return payload
 
     def drain(self, limit: int = 1 << 30) -> List[bytes]:
+        """Batched consume: everything available (≤ ``limit`` records) in one
+        pass — a single head read and a single tail publish for the whole
+        batch, instead of :meth:`pop`'s two shared-counter accesses per
+        record.  This is the agent's per-poll path when multiplexing many
+        sessions: record cost degrades to a local scan, and the producer sees
+        one tail jump.  Wrap markers and end-of-buffer padding are skipped by
+        the same rules as :meth:`pop`.
+        """
         out: List[bytes] = []
-        while len(out) < limit:
-            p = self.pop()
-            if p is None:
-                break
-            out.append(p)
+        head, tail = self.head, self.tail
+        start_tail = tail
+        while tail != head and len(out) < limit:
+            pos = tail % self.capacity
+            tail_room = self.capacity - pos
+            if tail_room < 4:
+                tail += tail_room  # unusable padding at buffer end
+                continue
+            (n,) = _U32.unpack_from(self._buf, _HDR + pos)
+            if n == _WRAP:
+                tail += tail_room
+                continue
+            out.append(bytes(self._buf[_HDR + pos + 4 : _HDR + pos + 4 + n]))
+            tail += 4 + n
+        if tail != start_tail:
+            self.tail = tail  # publish once
         return out
 
     # -- lifecycle ----------------------------------------------------------

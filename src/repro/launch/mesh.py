@@ -1,9 +1,10 @@
 """Production mesh factories (functions — importing never touches jax device
 state; the dry-run sets the 512-placeholder-device XLA flag before any jax
-import)."""
+import).  Mesh construction goes through :mod:`repro.compat` so the same
+code runs on JAX 0.4.x and ≥0.5 (``axis_types`` drift)."""
 from __future__ import annotations
 
-import jax
+from ..compat import make_mesh
 
 __all__ = ["make_production_mesh", "mesh_axes", "HW"]
 
@@ -19,8 +20,7 @@ HW = {
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def mesh_axes(multi_pod: bool = False):

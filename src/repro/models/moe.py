@@ -22,6 +22,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..compat import shard_map
 from ..core.registry import MetricSpec, tunable_component
 from ..core.tunable import Categorical, Float
 from ..parallel.sharding import constrain
@@ -164,7 +165,7 @@ def _moe_shard_map(params, x: jax.Array, cfg: ModelConfig, cf: float,
         aux = jax.lax.pmean(aux, axes)
         return y.reshape(b_loc, s_loc, d), aux
 
-    return jax.shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+    return shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                          check_vma=False)(params, x)
 
 

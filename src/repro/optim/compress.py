@@ -17,6 +17,7 @@ from typing import Any, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as PSpec
+from ..compat import shard_map
 
 __all__ = ["quantize_int8", "dequantize_int8", "ef_compress_tree", "compressed_psum_pod"]
 
@@ -57,5 +58,5 @@ def compressed_psum_pod(x: jax.Array, mesh, axis: str = "pod") -> jax.Array:
         return jnp.sum(qs.astype(jnp.float32) * ss, axis=0).astype(xs.dtype)
 
     spec = PSpec(*([None] * x.ndim))
-    return jax.shard_map(body, mesh=mesh, in_specs=spec, out_specs=spec,
+    return shard_map(body, mesh=mesh, in_specs=spec, out_specs=spec,
                          check_vma=False)(x)

@@ -12,6 +12,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as PSpec
+from ..compat import shard_map
 
 __all__ = ["ring_allgather_matmul", "psum_matmul"]
 
@@ -45,7 +46,7 @@ def ring_allgather_matmul(x: jax.Array, w: jax.Array, mesh: Mesh, axis: str = "m
         y, _ = jax.lax.fori_loop(0, n_dev, step, (y0, xs))
         return y
 
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh,
         in_specs=(PSpec(None, axis, None), PSpec(None, axis)),
         out_specs=PSpec(None, None, axis),
@@ -60,7 +61,7 @@ def psum_matmul(x: jax.Array, w: jax.Array, mesh: Mesh, axis: str = "model"):
     def body(xs, ws):
         return jax.lax.psum(jnp.einsum("bsk,kn->bsn", xs, ws), axis)
 
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh,
         in_specs=(PSpec(None, None, axis), PSpec(axis, None)),
         out_specs=PSpec(None, None, None),

@@ -24,6 +24,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
+from ..compat import mesh_axis_sizes
 from ..models.layers import P
 
 __all__ = [
@@ -97,7 +98,7 @@ SERVE_RULES = serve_rules()
 
 
 def _axis_sizes(mesh: Mesh) -> Dict[str, int]:
-    return dict(mesh.shape)  # works for Mesh and AbstractMesh alike
+    return mesh_axis_sizes(mesh)  # Mesh and AbstractMesh alike, any JAX version
 
 
 def spec_for(p: P, rules: Rules, mesh: Mesh) -> PartitionSpec:

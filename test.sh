@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Canonical tier-1 test entry point (see ROADMAP.md).
+#
+# Pins the two bits of environment the suite assumes:
+#   * PYTHONPATH includes src/ (the repo is run from source, not installed);
+#   * XLA_FLAGS requests 8 host platform devices so multi-device semantics
+#     are exercisable on CPU (SNIPPETS.md test.sh idiom).  test_distributed
+#     re-pins its own count inside subprocesses either way, and an existing
+#     XLA_FLAGS is respected.
+#
+# Usage: bash test.sh [pytest args...]   e.g. bash test.sh tests/test_sharding.py -k moe
+set -euo pipefail
+cd "$(dirname "$0")"
+export PYTHONPATH="$PWD/src${PYTHONPATH:+:$PYTHONPATH}"
+export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=8}"
+exec python -m pytest -q "$@"

@@ -1,0 +1,207 @@
+"""Multi-session agent multiplexing: demux, batched drain, end-to-end.
+
+Covers the paper's §2.1 instance-level claim — one agent concurrently tuning
+N live component instances over one shared-memory channel — plus the
+``ShmRing`` batched-drain consumer the agent poll loop uses (including the
+wrap-marker skip path).
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AgentClient,
+    AgentMux,
+    AgentProcess,
+    MlosChannel,
+    TrackedInstance,
+    TuningSession,
+    drive_session,
+    pack_telemetry,
+)
+from repro.core.channel import ShmRing
+from repro.core.registry import get_component
+from repro.core.smartcomponents import TunableHashTable, hashtable_workload
+
+# Distinct workloads per instance (cf. the paper's OpenRowSet vs BufferManager
+# hash tables): the optimum differs, so cross-routing telemetry would show up
+# as wrong convergence, not just noise.
+WORKLOADS = {
+    0: dict(n_keys=1500, lookup_ratio=2.0, skew=0.0, seed=1),
+    1: dict(n_keys=3000, lookup_ratio=4.0, skew=1.2, seed=2),
+    2: dict(n_keys=800, lookup_ratio=1.0, skew=0.4, seed=3),
+}
+
+
+def _sessions(budget=8, optimizer="rs"):
+    meta = get_component("hashtable")
+    return [
+        TuningSession.for_component(
+            meta, objective="collisions", optimizer=optimizer,
+            budget=budget, seed=10 + iid, instance_id=iid,
+        )
+        for iid in WORKLOADS
+    ]
+
+
+def _measure(table, iid):
+    return hashtable_workload(table, **WORKLOADS[iid])
+
+
+def _solo_best(session):
+    """Single-session baseline: the session run standalone via drive_session
+    (same seeds, same packed protocol, no channel)."""
+    table = TunableHashTable()
+
+    def measure(settings):
+        table.apply_and_rebuild(settings)
+        return _measure(table, session.instance_id)
+
+    return drive_session(session, measure).best.value
+
+
+# ----------------------------------------------------------------- ShmRing
+@pytest.fixture
+def ring():
+    r = ShmRing(capacity=1 << 8)
+    yield r
+    r.close()
+    r.unlink()
+
+
+def test_drain_batched_matches_pop_sequence():
+    a, b = ShmRing(capacity=1 << 15), ShmRing(capacity=1 << 15)
+    try:
+        rng = np.random.default_rng(0)
+        msgs = [rng.bytes(int(rng.integers(1, 120))) for _ in range(200)]
+        for m in msgs:
+            assert a.push(m) and b.push(m)
+        via_pop = [a.pop() for _ in range(200)]
+        assert b.drain() == via_pop == msgs
+        assert b.pop() is None and a.tail == b.tail
+    finally:
+        for r in (a, b):
+            r.close()
+            r.unlink()
+
+
+def test_drain_handles_wrap_marker(ring):
+    # capacity 256: four 58-byte records (62 w/ header) put the write cursor at
+    # 248; the next record needs a wrap marker in the 8 trailing bytes.
+    first = [bytes([i]) * 58 for i in range(4)]
+    for m in first:
+        assert ring.push(m)
+    assert ring.drain() == first  # frees space; head now mid-buffer
+    wrapped = [b"w" * 58, b"x" * 30]
+    for m in wrapped:
+        assert ring.push(m)  # first push writes the wrap marker
+    assert ring.head // ring.capacity > 0  # wrapped at least once
+    assert ring.drain() == wrapped
+    assert ring.pop() is None
+
+
+def test_drain_respects_limit_and_resumes(ring):
+    msgs = [bytes([i]) * 10 for i in range(12)]
+    for m in msgs:
+        assert ring.push(m)
+    assert ring.drain(limit=5) == msgs[:5]
+    assert ring.push(b"tail" * 3)  # producer can continue mid-drain
+    assert ring.drain(limit=100) == msgs[5:] + [b"tail" * 3]
+
+
+# ----------------------------------------------------------------- AgentMux
+def test_mux_interleaved_sessions_converge_independently():
+    """3 instances, telemetry interleaved round-robin over one stream: each
+    session must converge exactly as its single-session AgentCore twin does."""
+    meta = get_component("hashtable")
+    sessions = _sessions(budget=8)
+    mux = AgentMux(sessions)
+    tables = {iid: TunableHashTable() for iid in WORKLOADS}
+    pending = {}
+    for cmd in mux.start_commands():
+        msg = json.loads(cmd.decode())
+        assert msg["type"] == "config_update"
+        pending[msg["instance"]] = msg["settings"]
+
+    # Reference: the same sessions run standalone (same seeds, same metrics).
+    solo = {s.instance_id: _solo_best(TuningSession(**{**s.__dict__})) for s in sessions}
+
+    rounds = 0
+    while not mux.done and rounds < 100:
+        rounds += 1
+        for iid in WORKLOADS:  # strict round-robin interleave
+            if iid not in pending:
+                continue
+            cfg = pending.pop(iid)
+            tables[iid].apply_and_rebuild(cfg)
+            m = _measure(tables[iid], iid)
+            for out in mux.observe(pack_telemetry(meta, iid, m)):
+                msg = json.loads(out.decode())
+                if msg["type"] == "config_update":
+                    pending[msg["instance"]] = msg["settings"]
+
+    assert mux.done
+    for iid, core in ((k[1], c) for k, c in mux.cores.items()):
+        assert core.evaluations == 8
+        # Interleaving must not leak telemetry across sessions: bit-identical
+        # to the standalone run (deterministic objective + same seeds).
+        assert core.best.value == solo[iid]
+
+
+def test_mux_drops_unrouted_telemetry():
+    meta = get_component("hashtable")
+    mux = AgentMux(_sessions(budget=2))
+    mux.start_commands()
+    table = TunableHashTable()
+    m = _measure(table, 0)
+    assert mux.observe(pack_telemetry(meta, 99, m)) == []  # unknown instance
+    assert mux.observe(b"\x01") == []  # short frame
+    # truncated record with a VALID routing header must drop, not raise
+    assert mux.observe(pack_telemetry(meta, 0, m)[:12]) == []
+    assert mux.unrouted == 3
+
+
+def test_mux_rejects_duplicate_session_keys():
+    s = _sessions(budget=2)[0]
+    with pytest.raises(ValueError):
+        AgentMux([s, TuningSession(**{**s.__dict__})])
+
+
+# ------------------------------------------------------------- end-to-end
+def test_agent_process_multiplexes_three_instances():
+    """Acceptance: ONE AgentProcess tunes 3 instances over ONE channel, and
+    each session_report is no worse than its single-session baseline."""
+    meta = get_component("hashtable")
+    budget = 6
+
+    # Single-session baselines (one agent process per instance would be the
+    # pre-multiplexing shape; drive_session is its deterministic twin).
+    baseline = {s.instance_id: _solo_best(s) for s in _sessions(budget=budget)}
+
+    chan = MlosChannel.create(capacity=1 << 16)
+    try:
+        agent = AgentProcess(chan, _sessions(budget=budget)).start()
+        client = AgentClient(chan)
+        tracked = {iid: TrackedInstance(TunableHashTable()) for iid in WORKLOADS}
+        for iid, t in tracked.items():
+            client.register("hashtable", t, instance_id=iid)
+        for _ in range(40000):
+            client.poll(wait_s=0.002, deadline_s=30.0)
+            for iid, t in tracked.items():
+                if t.dirty:
+                    t.dirty = False
+                    chan.telemetry.push(
+                        pack_telemetry(meta, iid, _measure(t.instance, iid)))
+            if len(client.reports) == len(WORKLOADS):
+                break
+        agent.stop()
+        assert len(client.reports) == len(WORKLOADS)
+        for iid in WORKLOADS:
+            rep = client.report_for("hashtable", iid)
+            assert rep is not None and rep["evaluations"] == budget
+            # collisions objective is deterministic → multiplexed tune can't
+            # be worse than the identical-seeded single-session baseline
+            assert rep["best_value"] <= baseline[iid]
+    finally:
+        chan.close()

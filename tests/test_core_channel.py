@@ -1,11 +1,19 @@
-"""Shared-memory channel: framing, wrap-around, drop-not-block, cross-process."""
+"""Shared-memory channel: framing, wrap-around, drop-not-block, cross-process.
+
+``hypothesis`` is optional: the property test runs when it is installed; a
+deterministic pseudo-random sweep of the same invariant always runs.
+"""
+import multiprocessing
 import os
 import struct
-from multiprocessing import Process
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # pragma: no cover - exercised in hypothesis-less CI
+    given = None
 
 from repro.core.channel import MlosChannel, ShmRing
 
@@ -52,9 +60,7 @@ def test_payload_too_large(ring):
         ring.push(b"y" * (1 << 12))
 
 
-@given(st.lists(st.binary(min_size=1, max_size=200), min_size=1, max_size=60))
-@settings(max_examples=50, deadline=None)
-def test_property_fifo_roundtrip(payloads):
+def _fifo_roundtrip(payloads):
     r = ShmRing(capacity=1 << 14)
     try:
         kept = []
@@ -65,6 +71,23 @@ def test_property_fifo_roundtrip(payloads):
     finally:
         r.close()
         r.unlink()
+
+
+if given is not None:
+
+    @given(st.lists(st.binary(min_size=1, max_size=200), min_size=1, max_size=60))
+    @settings(max_examples=50, deadline=None)
+    def test_property_fifo_roundtrip(payloads):
+        _fifo_roundtrip(payloads)
+
+
+def test_fifo_roundtrip_deterministic():
+    """Non-hypothesis sweep of the same invariant (fixed-seed fuzz)."""
+    rng = np.random.default_rng(42)
+    for _ in range(25):
+        payloads = [rng.bytes(int(rng.integers(1, 201)))
+                    for _ in range(int(rng.integers(1, 61)))]
+        _fifo_roundtrip(payloads)
 
 
 def _producer(name: str, n: int) -> None:
@@ -80,7 +103,9 @@ def test_cross_process_spsc():
     r = ShmRing(capacity=1 << 14)
     try:
         n = 500
-        p = Process(target=_producer, args=(r.name, n), daemon=True)
+        # spawn, not fork: the pytest process holds a multithreaded JAX runtime
+        p = multiprocessing.get_context("spawn").Process(
+            target=_producer, args=(r.name, n), daemon=True)
         p.start()
         seen = 0
         while seen < n:

@@ -1,9 +1,17 @@
-"""Unit + property tests for the MLOS tunable/search-space layer."""
+"""Unit + property tests for the MLOS tunable/search-space layer.
+
+``hypothesis`` is optional: property tests run when it is installed;
+deterministic sweeps of the same invariants always run.
+"""
 import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # pragma: no cover - exercised in hypothesis-less CI
+    given = None
 
 from repro.core.tunable import Bool, Categorical, Float, Int, Tunable, TunableSpace
 
@@ -56,9 +64,7 @@ def test_grid_covers_extremes():
     assert len(g) <= 3 * 3 * 3 * 2
 
 
-@given(st.floats(min_value=0.0, max_value=1.0))
-@settings(max_examples=50, deadline=None)
-def test_encode_decode_roundtrip_unit(u):
+def _check_encode_decode_roundtrip(u):
     s = make_space()
     for t in s:
         v = t.decode(u)
@@ -70,13 +76,41 @@ def test_encode_decode_roundtrip_unit(u):
             assert v2 == v  # ints/categoricals: exactly idempotent
 
 
-@given(st.integers(min_value=16, max_value=65536))
-@settings(max_examples=50, deadline=None)
-def test_int_log_encode_monotone(b):
+def _check_int_log_encode(b):
     t = Int("buckets", default=1024, low=16, high=65536, log=True)
     u = t.encode(b)
     assert 0.0 <= u <= 1.0
     assert t.encode(16) == 0.0 and t.encode(65536) == 1.0
+
+
+if given is not None:
+
+    @given(st.floats(min_value=0.0, max_value=1.0))
+    @settings(max_examples=50, deadline=None)
+    def test_encode_decode_roundtrip_unit(u):
+        _check_encode_decode_roundtrip(u)
+
+    @given(st.integers(min_value=16, max_value=65536))
+    @settings(max_examples=50, deadline=None)
+    def test_int_log_encode_monotone(b):
+        _check_int_log_encode(b)
+
+
+def test_encode_decode_roundtrip_deterministic():
+    """Non-hypothesis sweep: endpoints + a fixed-seed sample of the unit cube."""
+    rng = np.random.default_rng(7)
+    for u in [0.0, 0.25, 0.5, 0.75, 1.0, *rng.uniform(0.0, 1.0, size=25)]:
+        _check_encode_decode_roundtrip(float(u))
+
+
+def test_int_log_encode_monotone_deterministic():
+    rng = np.random.default_rng(11)
+    samples = [16, 17, 1024, 65535, 65536, *rng.integers(16, 65537, size=25)]
+    for b in samples:
+        _check_int_log_encode(int(b))
+    encoded = [Int("buckets", default=1024, low=16, high=65536, log=True).encode(int(b))
+               for b in sorted(samples)]
+    assert encoded == sorted(encoded)  # monotone in b
 
 
 def test_space_vector_roundtrip():

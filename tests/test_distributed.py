@@ -17,6 +17,7 @@ def run_devprog(body: str, n_dev: int = 8, timeout: int = 600) -> str:
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n_dev}"
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as PS, NamedSharding
+        from repro.compat import make_mesh
         {textwrap.indent(textwrap.dedent(body), '        ').strip()}
         print("SUBPROC_OK")
     """)
@@ -31,7 +32,7 @@ def run_devprog(body: str, n_dev: int = 8, timeout: int = 600) -> str:
 def test_ring_allgather_matmul_matches_dense():
     run_devprog("""
         from repro.parallel.collectives import ring_allgather_matmul
-        mesh = jax.make_mesh((8,), ("model",), axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("model",))
         key = jax.random.PRNGKey(0)
         x = jax.random.normal(key, (2, 16, 32))
         w = jax.random.normal(key, (32, 64))
@@ -44,7 +45,7 @@ def test_ring_allgather_matmul_matches_dense():
 def test_compressed_psum_pod():
     run_devprog("""
         from repro.optim.compress import compressed_psum_pod
-        mesh = jax.make_mesh((8,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("pod",))
         x = jnp.linspace(-1.0, 1.0, 32).reshape(4, 8)
         got = jax.jit(lambda x: compressed_psum_pod(x, mesh, "pod"))(x)
         want = x * 8.0  # replicated input → psum = 8x
@@ -60,8 +61,7 @@ def test_tiny_dryrun_train_cell_compiles_and_runs():
         from repro.configs import get_config
         from repro.parallel import sharding as shd
         from repro.runtime import steps as rt
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         cfg = dataclasses.replace(get_config("olmo-1b").reduced(), d_model=64,
                                   n_heads=4, n_kv_heads=4, head_dim=16).validate()
         rules = shd.train_rules()
@@ -99,8 +99,7 @@ def test_tiny_moe_shard_map_matches_single_device():
         batch = {"tokens": jnp.zeros((8, 16), jnp.int32) + 3,
                  "labels": jnp.ones((8, 16), jnp.int32)}
         loss1, _ = M.loss_fn(params, cfg, batch)   # no mesh: gather path
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         rules = shd.serve_rules()
         def f(p, b):
             with shd.use_rules(mesh, rules):
@@ -121,8 +120,7 @@ def test_decode_cache_stays_sharded_and_ring_consistent():
         from repro.parallel import sharding as shd
         cfg = get_config("mixtral-8x22b").reduced().validate()  # windowed arch
         params = M.init_params(jax.random.PRNGKey(0), cfg)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         rules = shd.serve_rules()
         toks = jnp.zeros((2, 24), jnp.int32) + 5
         with shd.use_rules(mesh, rules):

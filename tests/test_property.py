@@ -1,12 +1,21 @@
-"""Property-based tests (hypothesis) on the system's invariants."""
+"""Property-based tests (hypothesis) on the system's invariants.
+
+``hypothesis`` is optional: when installed, the ``@given`` tests fuzz each
+invariant; a deterministic fixed-seed sweep of every invariant always runs,
+so a hypothesis-less environment still exercises the same subjects.
+"""
 import math
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ModuleNotFoundError:  # pragma: no cover - exercised in hypothesis-less CI
+    given = None
 
 from repro.configs import ALL_ARCHS, get_config
 from repro.core.optimizers import make_optimizer
@@ -16,13 +25,9 @@ from repro.kernels.flash_attention import ref as attn_ref
 from repro.launch.specs import depth_units, scaled_config
 from repro.optim.compress import dequantize_int8, quantize_int8
 
-SET = settings(max_examples=25, deadline=None)
 
-
-# ------------------------------------------------------------------- tunables
-@given(st.floats(1e-3, 1e3), st.floats(1.0, 1e4), st.floats(0, 1), st.booleans())
-@SET
-def test_float_tunable_encode_decode_roundtrip(lo, span, u, log):
+# ----------------------------------------------------------------- invariants
+def _check_float_roundtrip(lo, span, u, log):
     hi = lo + span
     t = Float("x", default=lo, low=lo, high=hi, log=log and lo > 0)
     v = t.decode(u)
@@ -32,17 +37,13 @@ def test_float_tunable_encode_decode_roundtrip(lo, span, u, log):
     assert math.isclose(v, v2, rel_tol=1e-6, abs_tol=1e-9)
 
 
-@given(st.integers(0, 30), st.integers(1, 200), st.floats(0, 1))
-@SET
-def test_int_tunable_decode_in_range(lo, span, u):
+def _check_int_decode_in_range(lo, span, u):
     t = Int("n", default=lo, low=lo, high=lo + span)
     v = t.decode(u)
     assert lo <= v <= lo + span and isinstance(v, int)
 
 
-@given(st.integers(0, 2**31), st.integers(2, 6))
-@SET
-def test_space_sample_always_validates(seed, k):
+def _check_space_sample_validates(seed, k):
     space = TunableSpace([
         Int("a", 4, 1, 64, log=True),
         Float("b", 0.5, 0.0, 1.0),
@@ -52,10 +53,7 @@ def test_space_sample_always_validates(seed, k):
     assert space.validate(cfg) == cfg
 
 
-@given(st.sampled_from(["random", "bo_matern32", "grid", "one_at_a_time"]),
-       st.integers(0, 1000))
-@SET
-def test_optimizers_stay_in_domain(name, seed):
+def _check_optimizer_stays_in_domain(name, seed):
     space = TunableSpace([Int("a", 4, 2, 32), Categorical("c", "u", ("u", "v"))])
     opt = make_optimizer(name, space, seed=seed)
     for i in range(6):
@@ -65,10 +63,7 @@ def test_optimizers_stay_in_domain(name, seed):
     assert opt.best.value <= min(o.value for o in opt.history)
 
 
-# ----------------------------------------------------------------------- data
-@given(st.integers(50, 5000), st.integers(0, 10_000), st.sampled_from([32, 64, 96]))
-@SET
-def test_packing_labels_are_next_token(vocab, seed, seq):
+def _check_packing_labels(vocab, seed, seq):
     b = PackedBatcher(SyntheticCorpus(vocab, seed=seed), 1, seq)
     x = b.batch_at(seed % 7)
     toks, labs = x["tokens"][0], x["labels"][0]
@@ -78,21 +73,14 @@ def test_packing_labels_are_next_token(vocab, seed, seq):
     assert (labs[:-1][nz[:-1]] == toks[1:][nz[:-1]]).all()
 
 
-# ------------------------------------------------------------------- compress
-@given(st.lists(st.floats(-1e4, 1e4, allow_nan=False), min_size=2, max_size=64))
-@SET
-def test_int8_quantization_error_bound(xs):
+def _check_int8_error_bound(xs):
     x = jnp.asarray(np.asarray(xs, np.float32))
     q, s = quantize_int8(x)
     err = np.abs(np.asarray(dequantize_int8(q, s)) - np.asarray(x))
     assert err.max() <= float(s) * 0.5 + 1e-5
 
 
-# ------------------------------------------------------------------ attention
-@given(st.integers(1, 2), st.sampled_from([16, 32]), st.integers(1, 2),
-       st.sampled_from([8, 16]), st.integers(0, 24))
-@SET
-def test_scan_matches_naive_attention(b, s, g, d, window):
+def _check_scan_matches_naive(b, s, g, d, window):
     k = 2
     h = k * g
     key = jax.random.PRNGKey(b * 100 + s + window)
@@ -105,10 +93,7 @@ def test_scan_matches_naive_attention(b, s, g, d, window):
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)
 
 
-# --------------------------------------------------------------------- config
-@given(st.sampled_from(ALL_ARCHS), st.integers(1, 4), st.integers(5, 8))
-@SET
-def test_param_count_linear_in_depth_units(arch, k1, k2):
+def _check_param_count_linear(arch, k1, k2):
     """The dry-run's linear counter extrapolation is exact iff parameters are
     linear in depth units — assert that invariant for every arch."""
     cfg = get_config(arch)
@@ -120,9 +105,103 @@ def test_param_count_linear_in_depth_units(arch, k1, k2):
     assert abs(extrap - cfg.param_count()) < 1e-6 * cfg.param_count() + 1
 
 
-@given(st.sampled_from(ALL_ARCHS))
-@SET
-def test_cache_len_bounded_by_window(arch):
+def _check_cache_len_bounded(arch):
     cfg = get_config(arch)
     if cfg.n_heads:
         assert cfg.cache_len(1 << 20) == (cfg.window if cfg.window else 1 << 20)
+
+
+# ------------------------------------------------------- hypothesis harnesses
+if given is not None:
+    SET = settings(max_examples=25, deadline=None)
+
+    @given(st.floats(1e-3, 1e3), st.floats(1.0, 1e4), st.floats(0, 1), st.booleans())
+    @SET
+    def test_float_tunable_encode_decode_roundtrip(lo, span, u, log):
+        _check_float_roundtrip(lo, span, u, log)
+
+    @given(st.integers(0, 30), st.integers(1, 200), st.floats(0, 1))
+    @SET
+    def test_int_tunable_decode_in_range(lo, span, u):
+        _check_int_decode_in_range(lo, span, u)
+
+    @given(st.integers(0, 2**31), st.integers(2, 6))
+    @SET
+    def test_space_sample_always_validates(seed, k):
+        _check_space_sample_validates(seed, k)
+
+    @given(st.sampled_from(["random", "bo_matern32", "grid", "one_at_a_time"]),
+           st.integers(0, 1000))
+    @SET
+    def test_optimizers_stay_in_domain(name, seed):
+        _check_optimizer_stays_in_domain(name, seed)
+
+    @given(st.integers(50, 5000), st.integers(0, 10_000), st.sampled_from([32, 64, 96]))
+    @SET
+    def test_packing_labels_are_next_token(vocab, seed, seq):
+        _check_packing_labels(vocab, seed, seq)
+
+    @given(st.lists(st.floats(-1e4, 1e4, allow_nan=False), min_size=2, max_size=64))
+    @SET
+    def test_int8_quantization_error_bound(xs):
+        _check_int8_error_bound(xs)
+
+    @given(st.integers(1, 2), st.sampled_from([16, 32]), st.integers(1, 2),
+           st.sampled_from([8, 16]), st.integers(0, 24))
+    @SET
+    def test_scan_matches_naive_attention(b, s, g, d, window):
+        _check_scan_matches_naive(b, s, g, d, window)
+
+    @given(st.sampled_from(ALL_ARCHS), st.integers(1, 4), st.integers(5, 8))
+    @SET
+    def test_param_count_linear_in_depth_units(arch, k1, k2):
+        _check_param_count_linear(arch, k1, k2)
+
+    @given(st.sampled_from(ALL_ARCHS))
+    @SET
+    def test_cache_len_bounded_by_window(arch):
+        _check_cache_len_bounded(arch)
+
+
+# ----------------------------------------------- deterministic fallback sweep
+def test_tunables_invariants_deterministic():
+    rng = np.random.default_rng(3)
+    for lo, span, u, log in zip(rng.uniform(1e-3, 1e3, 10), rng.uniform(1.0, 1e4, 10),
+                                rng.uniform(0, 1, 10), [True, False] * 5):
+        _check_float_roundtrip(float(lo), float(span), float(u), bool(log))
+    for lo, span, u in zip(rng.integers(0, 31, 10), rng.integers(1, 201, 10),
+                           [0.0, 1.0, *rng.uniform(0, 1, 8)]):
+        _check_int_decode_in_range(int(lo), int(span), float(u))
+    for seed, k in zip(rng.integers(0, 2**31, 8), range(2, 10)):
+        _check_space_sample_validates(int(seed), int(k))
+
+
+def test_optimizers_stay_in_domain_deterministic():
+    for name in ["random", "bo_matern32", "grid", "one_at_a_time"]:
+        for seed in (0, 17, 999):
+            _check_optimizer_stays_in_domain(name, seed)
+
+
+def test_packing_labels_deterministic():
+    for vocab, seed, seq in [(50, 0, 32), (5000, 10_000, 96), (337, 1234, 64)]:
+        _check_packing_labels(vocab, seed, seq)
+
+
+def test_int8_quantization_error_bound_deterministic():
+    rng = np.random.default_rng(5)
+    cases = [[0.0, 0.0], [-1e4, 1e4], list(rng.uniform(-1e4, 1e4, 64)),
+             list(rng.normal(0, 1, 7))]
+    for xs in cases:
+        _check_int8_error_bound(xs)
+
+
+def test_scan_matches_naive_attention_deterministic():
+    for b, s, g, d, window in [(1, 16, 1, 8, 0), (2, 32, 2, 16, 24), (1, 32, 2, 8, 7)]:
+        _check_scan_matches_naive(b, s, g, d, window)
+
+
+def test_config_invariants_deterministic():
+    for arch in ALL_ARCHS:
+        _check_param_count_linear(arch, 1, 5)
+        _check_param_count_linear(arch, 4, 8)
+        _check_cache_len_bounded(arch)

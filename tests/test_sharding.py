@@ -2,18 +2,21 @@
 
 Uses AbstractMesh so the production (16,16) / (2,16,16) topologies are tested
 without 512 devices (NamedSharding over an AbstractMesh resolves specs fine).
+Meshes come from :mod:`repro.compat` — AbstractMesh's constructor signature
+differs between JAX 0.4.x and ≥0.5.
 """
 import jax
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as PS
+from jax.sharding import PartitionSpec as PS
 
+from repro.compat import abstract_mesh, mesh_axis_sizes
 from repro.configs import get_config
 from repro.models import model as M
 from repro.models.layers import P
 from repro.parallel import sharding as shd
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH = abstract_mesh((16, 16), ("data", "model"))
+MESH3 = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def spec(p, rules, mesh=MESH):
@@ -81,7 +84,7 @@ def test_every_param_leaf_resolves(arch):
     for leaf in jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)):
         s = shd.spec_for(leaf, rules, MESH)
         # every sharded dim must divide evenly
-        sizes = dict(MESH.shape)
+        sizes = mesh_axis_sizes(MESH)
         for dim, ax in zip(leaf.shape, s):
             if ax is None:
                 continue
