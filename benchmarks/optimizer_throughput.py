@@ -1,0 +1,149 @@
+"""Suggest-path throughput: numpy reference vs the jitted JAX engine.
+
+MLOS's continuous-tuning pitch only holds if the agent's ask is cheap enough
+to run inline with the system it tunes.  This benchmark measures BO
+``ask`` latency against history size (the numpy reference refits an O(n³)
+GP per ask; the jax engine amortizes to a rank-1 update + one fused device
+call) and the mux-wide batched ask (8 sessions priced in one dispatch vs 8
+sequential asks).
+
+This is the repo's first *tracked perf trajectory point*:
+``results/bench/optimizer_throughput.json`` is meant to be re-recorded as
+the engine evolves.  ``--quick`` (used by ``test.sh --bench-smoke``) runs a
+seconds-scale subset with the same JSON schema so the harness can't rot.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import time
+from pathlib import Path
+from typing import Any, Dict, List
+
+# Must be set before jax import — matches the test.sh environment, so the
+# numbers recorded here are measured in the same configuration the tier-1
+# suite runs under.  (The batched ask itself is a fused vmap on one device;
+# pmap across host devices measured slower, see engine._batched_suggest_fn.)
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+
+from repro.core.optimizers import BayesOpt
+from repro.core.optimizers.engine import BatchedBayesOpt
+from repro.core.tunable import Categorical, Float, Int, TunableSpace
+
+SPACE = TunableSpace([
+    Int("log2_buckets", 12, 8, 20),
+    Categorical("probe", "linear", ("linear", "quadratic", "double")),
+    Int("prefetch", 2, 1, 8),
+    Float("alpha", 0.5, 0.0, 1.0),
+    Float("lr", 1e-3, 1e-5, 1e-1, log=True),
+    Categorical("vectorized", False, (False, True)),
+])
+
+
+def _objective(cfg: Dict[str, Any]) -> float:
+    x = SPACE.encode(cfg)
+    return float(((x - 0.37) ** 2).sum() + 0.05 * np.sin(13 * x).sum())
+
+
+def _with_history(backend: str, seed: int, n: int) -> BayesOpt:
+    opt = BayesOpt(SPACE, seed=seed, backend=backend)
+    rng = np.random.default_rng(1000 + seed)
+    for _ in range(n):
+        cfg = SPACE.sample(rng)
+        opt.tell(cfg, _objective(cfg))
+    return opt
+
+
+def _time_asks(opt: BayesOpt, repeats: int, warmup: int = 1) -> List[float]:
+    for _ in range(warmup):  # jax: triggers compile; numpy: cache warm
+        opt.ask()
+    out = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        opt.ask()
+        out.append((time.perf_counter() - t0) * 1e3)
+    return out
+
+
+def main() -> Dict[str, Any]:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="seconds-scale subset with the same JSON schema")
+    args = ap.parse_args()
+
+    import jax  # after XLA_FLAGS
+
+    ns = [25] if args.quick else [25, 100, 200]
+    np_reps = 2 if args.quick else 4
+    jx_reps = 5 if args.quick else 20
+    n_sessions = 8
+    # Headline batched point sits in the regime tuning sessions actually live
+    # in (budget ~50 ⇒ most asks at n<64); large-n is reported as context —
+    # there the posterior solves are compute-bound and batching amortizes
+    # only dispatch, not FLOPs.
+    sess_hists = [16] if args.quick else [25, 100]
+
+    res: Dict[str, Any] = {
+        "quick": bool(args.quick),
+        "d": len(SPACE),
+        "n_candidates": 1280,
+        "host_devices": len(jax.devices()),
+        "ask_latency_ms": {},
+        "batched": {},
+    }
+
+    print(f"BO ask latency, d={len(SPACE)}, pool=1280 candidates "
+          f"({len(jax.devices())} XLA host devices)")
+    for n in ns:
+        t_np = _time_asks(_with_history("numpy", seed=7, n=n), np_reps)
+        t_jx = _time_asks(_with_history("jax", seed=7, n=n), jx_reps, warmup=2)
+        mn, mj = statistics.median(t_np), statistics.median(t_jx)
+        res["ask_latency_ms"][str(n)] = {
+            "numpy": mn, "jax": mj, "speedup": mn / mj,
+            "numpy_mean": statistics.fmean(t_np), "jax_mean": statistics.fmean(t_jx),
+        }
+        print(f"  n={n:4d}  numpy={mn:9.2f} ms   jax={mj:7.2f} ms   "
+              f"speedup={mn / mj:6.1f}x")
+
+    # -- mux-wide batched ask: 8 sessions, one dispatch --------------------
+    def _median(fn, reps):
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn()
+            ts.append((time.perf_counter() - t0) * 1e3)
+        return statistics.median(ts)
+
+    reps = 3 if args.quick else 10
+    for sess_hist in sess_hists:
+        seq_opts = [_with_history("jax", seed=s, n=sess_hist)
+                    for s in range(n_sessions)]
+        bat_opts = [_with_history("jax", seed=s, n=sess_hist)
+                    for s in range(n_sessions)]
+        for o in seq_opts:  # compile + hyper-refit warmup
+            o.ask()
+        batched = BatchedBayesOpt(bat_opts)
+        batched.ask_all()
+        t_seq = _median(lambda: [o.ask() for o in seq_opts], reps)
+        t_bat = _median(batched.ask_all, reps)
+        res["batched"][str(sess_hist)] = {
+            "sessions": n_sessions, "history": sess_hist,
+            "sequential_ms": t_seq, "batched_ms": t_bat,
+            "speedup": t_seq / t_bat,
+        }
+        print(f"  {n_sessions} sessions (n={sess_hist}): sequential={t_seq:7.2f} ms"
+              f"   batched={t_bat:7.2f} ms   speedup={t_seq / t_bat:5.1f}x")
+
+    out = Path("results/bench")
+    out.mkdir(parents=True, exist_ok=True)
+    (out / "optimizer_throughput.json").write_text(json.dumps(res, indent=1))
+    print(f"wrote {out / 'optimizer_throughput.json'}")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -46,7 +46,7 @@ import time
 from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
 from .channel import MlosChannel
-from .optimizers import make_optimizer
+from .optimizers import make_optimizer, optimizer_defaults, set_optimizer_defaults
 from .registry import ComponentMeta, MetricSpec
 from .tunable import TunableSpace
 
@@ -150,18 +150,35 @@ class AgentCore:
 
     def observe(self, payload: bytes) -> Optional[bytes]:
         """Feed one telemetry record; maybe emit the next config-update."""
+        kind, out = self._ingest(payload)
+        if kind == "ask":
+            return self.resolve_ask(self.opt.ask())
+        return out
+
+    def _ingest(self, payload: bytes) -> Tuple[str, Optional[bytes]]:
+        """Tell-side of :meth:`observe`: consume one record WITHOUT asking.
+
+        Returns ``("none", None)`` (not ours / more samples needed),
+        ``("park", cmd)`` (budget exhausted — park on the best config), or
+        ``("ask", None)`` — the session needs its next proposal.  The caller
+        either resolves the ask immediately (:meth:`observe`) or defers it so
+        the mux can batch every pending ask into one device dispatch.
+        While an ask is deferred ``_pending_cfg`` is None, so stray records
+        for this instance are dropped rather than attributed to a config the
+        optimizer has not chosen yet.
+        """
         if self.done or self._pending_cfg is None:
-            return None
+            return "none", None
         vals = struct.unpack(self.session.metric_fmt, payload)
         if (vals[0], vals[1]) != self.key:
-            return None  # not ours
+            return "none", None  # not ours
         metrics = dict(zip(self.session.metric_names, vals[2:]))
         v = float(metrics[self.session.objective])
         if self.session.mode == "max":
             v = -v
         self._samples.append(v)
         if len(self._samples) < self.session.samples_per_config:
-            return None
+            return "none", None
         value = sum(self._samples) / len(self._samples)
         self._samples = []
         self.opt.tell(self._pending_cfg, value)
@@ -171,9 +188,15 @@ class AgentCore:
             best = self.opt.best
             assert best is not None
             self._pending_cfg = None
-            return self._command(best.config)  # park system on the best config
-        self._pending_cfg = self.opt.ask()
-        return self._command(self._pending_cfg)
+            return "park", self._command(best.config)
+        self._pending_cfg = None
+        return "ask", None
+
+    def resolve_ask(self, cfg: Dict[str, Any]) -> bytes:
+        """Install a proposed config (from ``opt.ask()`` or a batched ask)
+        as the pending one and emit its config-update command."""
+        self._pending_cfg = cfg
+        return self._command(cfg)
 
     def session_report(self) -> Optional[bytes]:
         """Final per-session summary for the host (None before any tell)."""
@@ -243,26 +266,77 @@ class AgentMux:
     def start_commands(self) -> List[bytes]:
         return [c.start_command() for c in self.cores.values()]
 
-    def observe(self, payload: bytes) -> List[bytes]:
-        """Route one record; returns messages to push (commands + reports)."""
+    def _route(self, payload: bytes) -> Optional[AgentCore]:
         if len(payload) < _HEADER.size:
             self.unrouted += 1
-            return []
+            return None
         core = self.cores.get(_HEADER.unpack_from(payload, 0))
         if core is None or len(payload) != core.payload_size:
             # Unknown instance OR malformed frame for a known one: a truncated
             # record must not raise out of the daemon's poll loop.
             self.unrouted += 1
-            return []
-        out: List[bytes] = []
-        cmd = core.observe(payload)
-        if cmd is not None:
-            out.append(cmd)
+            return None
+        return core
+
+    def _maybe_report(self, core: AgentCore, out: List[bytes]) -> None:
         if core.done and core.key not in self._reported:
             rep = core.session_report()
             if rep is not None:
                 self._reported.add(core.key)
                 out.append(rep)
+
+    def observe(self, payload: bytes) -> List[bytes]:
+        """Route one record; returns messages to push (commands + reports)."""
+        core = self._route(payload)
+        if core is None:
+            return []
+        out: List[bytes] = []
+        cmd = core.observe(payload)
+        if cmd is not None:
+            out.append(cmd)
+        self._maybe_report(core, out)
+        return out
+
+    def observe_batch(self, payloads: Sequence[bytes]) -> List[bytes]:
+        """Route a drained batch; collect every session that finished a
+        config and issue ALL their next proposals as one batched ask.
+
+        With jax-backed BO sessions the whole mux's suggest sweep is a single
+        device dispatch (:class:`~.optimizers.engine.BatchedBayesOpt`); other
+        optimizers fall back to per-session ``ask`` with identical results to
+        the serial :meth:`observe` loop (asks are deferred only to the end of
+        the batch, and each optimizer owns its rng).
+        """
+        out: List[bytes] = []
+        need: List[AgentCore] = []
+        pending_ids = set()
+        for payload in payloads:
+            core = self._route(payload)
+            if core is None:
+                continue
+            if id(core) in pending_ids:
+                # Second completed config for one instance inside a single
+                # drained batch (possible when the host runs far ahead):
+                # resolve the deferred ask serially to preserve tell→ask order.
+                pending_ids.discard(id(core))
+                need.remove(core)
+                out.append(core.resolve_ask(core.opt.ask()))
+            kind, msg = core._ingest(payload)
+            if msg is not None:
+                out.append(msg)
+            if kind == "ask":
+                need.append(core)
+                pending_ids.add(id(core))
+            self._maybe_report(core, out)
+        if need:
+            if any(getattr(c.opt, "backend", None) == "jax" for c in need):
+                from .optimizers.engine import batched_ask  # deferred: jax is heavy
+
+                cfgs = batched_ask([c.opt for c in need])
+            else:
+                cfgs = [c.opt.ask() for c in need]
+            for core, cfg in zip(need, cfgs):
+                out.append(core.resolve_ask(cfg))
         return out
 
     def final_reports(self) -> List[bytes]:
@@ -284,13 +358,21 @@ def agent_main(
     sessions_json: str,
     poll_s: float = 0.0005,
     drain_batch: int = 256,
+    optimizer_defaults_json: Optional[str] = None,
 ) -> None:
     """Entry point of the agent process: one mux over the duplex channel.
 
     Each idle poll sleeps once and then drains up to ``drain_batch`` records
     in one pass — under N interleaved sessions the per-record overhead is a
     dict lookup, not a syscall + sleep.
+
+    ``optimizer_defaults_json`` replays the host's process-wide optimizer
+    defaults (e.g. ``optimizer.backend=jax`` from launch/tuning) into this
+    freshly *spawned* interpreter — without it, sessions naming a generic
+    optimizer ("bo") would silently fall back to the module defaults.
     """
+    if optimizer_defaults_json:
+        set_optimizer_defaults(**json.loads(optimizer_defaults_json))
     chan = MlosChannel.attach(telemetry_name, control_name)
     mux = AgentMux(sessions_from_json(sessions_json))
     try:
@@ -302,12 +384,14 @@ def agent_main(
             if not batch:
                 time.sleep(poll_s)
                 continue
-            for payload in batch:
-                if payload == _CONTROL_STOP:
-                    stopped = True
-                    break
-                for msg in mux.observe(payload):
-                    chan.control.push(msg)
+            if _CONTROL_STOP in batch:
+                stopped = True
+                batch = batch[: batch.index(_CONTROL_STOP)]
+            # One batched observe per poll: every session that completed a
+            # config in this drain gets its next proposal from ONE device
+            # dispatch (jax-backed BO) instead of N sequential model refits.
+            for msg in mux.observe_batch(batch):
+                chan.control.push(msg)
         for rep in mux.final_reports():
             chan.control.push(rep)
     finally:
@@ -336,8 +420,13 @@ class AgentProcess:
         self.sessions = list(sessions)
         tele, ctrl = channel.names
         ctx = multiprocessing.get_context(mp_context)
+        # Snapshot the host's optimizer defaults: the spawned interpreter
+        # re-imports everything fresh, so launch-level overrides must travel.
         self.proc = ctx.Process(
-            target=agent_main, args=(tele, ctrl, sessions_to_json(self.sessions)), daemon=True
+            target=agent_main,
+            args=(tele, ctrl, sessions_to_json(self.sessions)),
+            kwargs={"optimizer_defaults_json": json.dumps(optimizer_defaults())},
+            daemon=True,
         )
 
     def start(self) -> "AgentProcess":

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import struct
 from multiprocessing import shared_memory
-from typing import List, Optional
+from typing import List, Optional, Sequence
 
 __all__ = ["ShmRing", "MlosChannel"]
 
@@ -71,33 +71,62 @@ class ShmRing:
         Dropping telemetry under pressure (rather than blocking the system's
         inner loop) is the paper's explicit design choice.
         """
+        return self.push_many((payload,)) == 1
+
+    def _write_record(self, head: int, tail: int, payload: bytes) -> int:
+        """Frame one record at the local ``head`` cursor (wrap marker /
+        end-of-buffer padding rules shared by every producer path); returns
+        the advanced cursor, or -1 if the record does not fit.  The caller
+        owns publishing ``self.head``."""
         n = len(payload)
         need = 4 + n
-        if need > self.capacity // 2:
-            raise ValueError("payload too large for ring")
-        head, tail = self.head, self.tail
         free = self.capacity - (head - tail)
         pos = head % self.capacity
         tail_room = self.capacity - pos
         if tail_room < 4:
-            # Cannot even fit a wrap marker header cleanly; pad to boundary.
+            # Cannot even fit a wrap marker header cleanly; pad to boundary
+            # (consumer skips unusable <4-byte tails by the same rule).
             if free < tail_room + need:
-                return False
-            # zero-fill unusable tail; consumer skips by same rule
+                return -1
             head += tail_room
             pos = 0
         elif tail_room < need:
             if free < tail_room + need:
-                return False
+                return -1
             _U32.pack_into(self._buf, _HDR + pos, _WRAP)
             head += tail_room
             pos = 0
         elif free < need:
-            return False
+            return -1
         self._buf[_HDR + pos + 4 : _HDR + pos + 4 + n] = payload
         _U32.pack_into(self._buf, _HDR + pos, n)
-        self.head = head + need  # publish
-        return True
+        return head + need
+
+    def push_many(self, payloads: Sequence[bytes]) -> int:
+        """Batched produce mirroring :meth:`drain`: one head read, local
+        cursor arithmetic per record, and a single head publish for the whole
+        batch — the consumer sees all-or-progress, never a torn batch, and
+        the shared counters are touched twice regardless of batch size.
+
+        Returns how many leading payloads were appended; a full ring drops
+        the remainder rather than blocking.  Oversized payloads raise before
+        anything is published.
+        """
+        for p in payloads:
+            if 4 + len(p) > self.capacity // 2:
+                raise ValueError("payload too large for ring")
+        head, tail = self.head, self.tail
+        start = head
+        sent = 0
+        for p in payloads:
+            nxt = self._write_record(head, tail, p)
+            if nxt < 0:
+                break
+            head = nxt
+            sent += 1
+        if head != start:
+            self.head = head  # publish once
+        return sent
 
     # -- consumer -----------------------------------------------------------
     def pop(self) -> Optional[bytes]:

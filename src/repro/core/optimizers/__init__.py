@@ -7,8 +7,26 @@ from .random_search import OneAtATime, RandomSearch
 __all__ = [
     "Observation", "Optimizer", "optimize",
     "BayesOpt", "GP", "KERNELS", "GridSearch", "OneAtATime", "RandomSearch",
-    "make_optimizer",
+    "make_optimizer", "set_optimizer_defaults", "optimizer_defaults",
 ]
+
+# Process-wide defaults applied by make_optimizer when the caller does not
+# pin them — the launch CLI flips the whole stack to the jax engine with one
+# override (``optimizer.backend=jax``, see launch/tuning.py).
+_DEFAULTS: dict = {"backend": "numpy"}
+
+
+def set_optimizer_defaults(**kw) -> None:
+    unknown = set(kw) - set(_DEFAULTS)
+    if unknown:
+        raise ValueError(f"unknown optimizer defaults {sorted(unknown)}")
+    if "backend" in kw and kw["backend"] not in ("numpy", "jax"):
+        raise ValueError(f"unknown backend {kw['backend']!r}")
+    _DEFAULTS.update(kw)
+
+
+def optimizer_defaults() -> dict:
+    return dict(_DEFAULTS)
 
 
 def make_optimizer(name: str, space, seed: int = 0, **kw):
@@ -20,9 +38,16 @@ def make_optimizer(name: str, space, seed: int = 0, **kw):
     if name in ("oaat", "one_at_a_time"):
         return OneAtATime(space, seed, **kw)
     if name in ("bo", "bayesopt", "gp"):
+        kw.setdefault("backend", _DEFAULTS["backend"])
         return BayesOpt(space, seed, **kw)
     if name in ("bo_rbf",):
+        kw.setdefault("backend", _DEFAULTS["backend"])
         return BayesOpt(space, seed, kernel="rbf", **kw)
     if name in ("bo_matern32", "bo_matern"):
+        kw.setdefault("backend", _DEFAULTS["backend"])
         return BayesOpt(space, seed, kernel="matern32", **kw)
+    if name in ("bo_jax", "bo_jax_matern32"):
+        return BayesOpt(space, seed, kernel="matern32", backend="jax", **kw)
+    if name in ("bo_jax_rbf",):
+        return BayesOpt(space, seed, kernel="rbf", backend="jax", **kw)
     raise ValueError(f"unknown optimizer {name!r}")

@@ -36,7 +36,14 @@ class Optimizer:
         raise NotImplementedError
 
     def tell(self, config: Dict[str, Any], value: float) -> None:
-        self.history.append(Observation(dict(config), value))
+        obs = Observation(dict(config), value)
+        self.history.append(obs)
+        self._on_tell(obs)
+
+    def _on_tell(self, obs: Observation) -> None:
+        """Hook: incremental backends fold the observation into model state
+        here (O(n²) for the jax GP's rank-1 Cholesky) instead of refitting
+        from the full history at ask time."""
 
     @property
     def best(self) -> Optional[Observation]:

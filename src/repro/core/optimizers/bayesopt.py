@@ -3,20 +3,53 @@
 Minimization convention.  The space is embedded into [0,1]^d via
 ``TunableSpace.encode``; candidates are a random pool plus local
 perturbations of the incumbent, scored by the acquisition function.
+
+Two interchangeable surrogate backends (``backend=`` ctor arg):
+
+  * ``"numpy"`` — the reference path: scipy GP refit from scratch per ask.
+  * ``"jax"``   — :class:`~.engine.JaxGP`: incremental Cholesky on tell, one
+    fused device call per ask, and batchable across sessions via
+    :class:`~.engine.BatchedBayesOpt`.
+
+Candidate generation (and therefore the rng stream) is shared between the
+backends, so with hyperparameter fitting disabled the two are argmax-
+equivalent — a tested contract (``tests/test_optimizer_engine.py``).
 """
 from __future__ import annotations
 
-import math
-from typing import Any, Dict
+from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
 from scipy.stats import norm
 
 from ..tunable import TunableSpace
-from .base import Optimizer
+from .base import Observation, Optimizer
 from .gaussian_process import GP
 
-__all__ = ["BayesOpt"]
+__all__ = ["BayesOpt", "dedup_rows"]
+
+
+def dedup_rows(X: np.ndarray, y: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Collapse duplicate encoded rows, keeping the best (lowest) y per row.
+
+    First-occurrence order is preserved so both backends see the same row
+    numbering.  Categoricals collapse many configs onto one encoding; feeding
+    the duplicates to the GP makes the kernel matrix singular and forces
+    jitter-rescue Cholesky retries — folding them is both faster and stabler.
+    """
+    index: Dict[bytes, int] = {}
+    keep: list = []
+    yd: list = []
+    for i in range(len(X)):
+        key = np.ascontiguousarray(X[i]).tobytes()
+        j = index.get(key)
+        if j is None:
+            index[key] = len(keep)
+            keep.append(i)
+            yd.append(y[i])
+        elif y[i] < yd[j]:
+            yd[j] = y[i]
+    return X[keep], np.asarray(yd, dtype=np.float64)
 
 
 class BayesOpt(Optimizer):
@@ -29,13 +62,43 @@ class BayesOpt(Optimizer):
         n_init: int = 5,
         n_candidates: int = 1024,
         ucb_beta: float = 2.0,
+        backend: str = "numpy",
+        fit_hypers: bool = True,
     ):
         super().__init__(space, seed)
+        if backend not in ("numpy", "jax"):
+            raise ValueError(f"unknown backend {backend!r}")
         self.kernel = kernel
         self.acquisition = acquisition
         self.n_init = n_init
         self.n_candidates = n_candidates
         self.ucb_beta = ucb_beta
+        self.backend = backend
+        self.fit_hypers = fit_hypers
+        self._engine = None  # lazy: keeps jax out of numpy-only processes
+
+    # -- shared helpers -------------------------------------------------------
+    def _engine_for(self):
+        if self._engine is None:
+            from .engine import JaxGP  # deferred import: jax is heavy
+
+            self._engine = JaxGP(len(self.space), kernel=self.kernel,
+                                 fit_hypers=self.fit_hypers)
+        return self._engine
+
+    def _on_tell(self, obs: Observation) -> None:
+        if self.backend == "jax":
+            self._engine_for().observe(self.space.encode(obs.config), obs.value)
+
+    def _candidates(self, inc: np.ndarray) -> np.ndarray:
+        """Random pool + local perturbations of the incumbent.  Shared by
+        both backends — same rng object, same draw order, same pool."""
+        d = len(self.space)
+        pool = self.rng.random((self.n_candidates, d))
+        local = np.clip(
+            inc[None, :] + 0.08 * self.rng.standard_normal((self.n_candidates // 4, d)),
+            0, 1)
+        return np.concatenate([pool, local], axis=0)
 
     def _acq(self, mu: np.ndarray, sd: np.ndarray, best: float) -> np.ndarray:
         if self.acquisition == "ucb":  # lower-confidence bound for minimization
@@ -45,18 +108,28 @@ class BayesOpt(Optimizer):
         ei = imp * norm.cdf(z) + sd * norm.pdf(z)
         return np.where(sd > 1e-12, ei, 0.0)
 
+    def _model_inputs(self):
+        """(engine, candidates, acq_id, beta) for the batched ask path.
+        Draws this ask's candidate pool — call once per ask."""
+        eng = self._engine_for()
+        cand = self._candidates(eng.incumbent())
+        return eng, cand, (1 if self.acquisition == "ucb" else 0), self.ucb_beta
+
+    # -- ask ------------------------------------------------------------------
     def _ask(self) -> Dict[str, Any]:
         if len(self.history) < self.n_init:
             return self.space.sample(self.rng)
-        X = np.stack([self.space.encode(o.config) for o in self.history])
+        if self.backend == "jax":
+            eng, cand, acq_id, beta = self._model_inputs()
+            idx, _ = eng.suggest(cand, self.acquisition, beta)
+            return self.space.decode(cand[idx])
+        X = self.space.encode_batch([o.config for o in self.history])
         y = np.array([o.value for o in self.history])
-        # De-duplicate identical encodings (categoricals collapse) for stability.
-        gp = GP(kernel=self.kernel).fit(X, y)
-        d = X.shape[1]
-        pool = self.rng.random((self.n_candidates, d))
-        inc = X[int(np.argmin(y))]
-        local = np.clip(inc[None, :] + 0.08 * self.rng.standard_normal((self.n_candidates // 4, d)), 0, 1)
-        cand = np.concatenate([pool, local], axis=0)
+        # De-duplicate identical encodings (categoricals collapse): keep the
+        # best observation per row so the GP sees a consistent function value.
+        X, y = dedup_rows(X, y)
+        gp = GP(kernel=self.kernel, fit_hypers=self.fit_hypers).fit(X, y)
+        cand = self._candidates(X[int(np.argmin(y))])
         mu, sd = gp.predict(cand)
         score = self._acq(mu, sd, float(y.min()))
         return self.space.decode(cand[int(np.argmax(score))])

@@ -6,6 +6,12 @@ kernels (Fig. 3 legend).  This is a dependency-free (numpy/scipy) GP with:
   * jittered Cholesky solves,
   * marginal-likelihood hyperparameter fitting via multi-start L-BFGS-B
     on (log lengthscale, log signal var, log noise var).
+
+This is the REFERENCE backend of :class:`~repro.core.optimizers.bayesopt.
+BayesOpt`: the jitted production engine (:mod:`~repro.core.optimizers.
+engine`) is held argmax-equivalent to it under fixed hyperparameters
+(tests/test_optimizer_engine.py).  Changes to the math here are contract
+changes for the engine too.
 """
 from __future__ import annotations
 
@@ -52,9 +58,12 @@ class GP:
         self._X: Optional[np.ndarray] = None
 
     # ---------------------------------------------------------------- fitting
-    def _nll(self, theta: np.ndarray, X: np.ndarray, y: np.ndarray) -> float:
+    def _nll(self, theta: np.ndarray, X: np.ndarray, y: np.ndarray,
+             eye: Optional[np.ndarray] = None) -> float:
         ls, sv, nv = np.exp(theta)
-        K = sv * self.kfn(X, X, ls) + (nv + 1e-8) * np.eye(len(X))
+        if eye is None:
+            eye = np.eye(len(X))
+        K = sv * self.kfn(X, X, ls) + (nv + 1e-8) * eye
         try:
             L = np.linalg.cholesky(K)
         except np.linalg.LinAlgError:
@@ -69,10 +78,11 @@ class GP:
         yn = (y - self._ymean) / self._ystd
         if self.fit_hypers and len(X) >= 4:
             best, best_v = None, np.inf
+            eye = np.eye(len(X))  # shared across the ~100s of nll evals
             for ls0 in (0.1, 0.3, 1.0):
                 t0 = np.log([ls0, 1.0, max(self.noise, 1e-6)])
                 res = minimize(
-                    self._nll, t0, args=(X, yn), method="L-BFGS-B",
+                    self._nll, t0, args=(X, yn, eye), method="L-BFGS-B",
                     bounds=[(-4.6, 2.3), (-4.6, 4.6), (-13.8, 0.0)],
                     options={"maxiter": 60},
                 )

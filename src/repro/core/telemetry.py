@@ -19,7 +19,7 @@ from __future__ import annotations
 import os
 import re
 import time
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional, Sequence
 
 from .channel import MlosChannel
 from .codegen import pack_telemetry
@@ -31,29 +31,75 @@ _PAGE = os.sysconf("SC_PAGE_SIZE")
 _CLK = os.sysconf("SC_CLK_TCK")
 
 
+class _ProcReader:
+    """Open ``/proc/<pid>/{stat,status}`` once; ``seek(0)`` + read per sample.
+
+    procfs regenerates content on read-after-rewind, so keeping the file
+    objects alive turns every sample into two reads instead of two
+    open/read/close round-trips (path walk + fd churn) — the difference
+    between "cheap enough for inner loops" as documented and merely cheap.
+    """
+
+    __slots__ = ("stat", "status")
+
+    def __init__(self, pid: str):
+        self.stat = open(f"/proc/{pid}/stat", "rb")
+        self.status = open(f"/proc/{pid}/status", "rb")
+
+    def close(self) -> None:
+        for f in (self.stat, self.status):
+            try:
+                f.close()
+            except OSError:  # pragma: no cover
+                pass
+
+
+_PROC_READERS: Dict[str, _ProcReader] = {}
+_PROC_READERS_PID = os.getpid()
+
+
+def _proc_reader(pid: str) -> Optional[_ProcReader]:
+    global _PROC_READERS_PID
+    if os.getpid() != _PROC_READERS_PID:
+        # fork()ed child: inherited fds are bound to the PARENT's /proc files
+        # and would silently report its counters — drop and reopen.
+        _PROC_READERS.clear()
+        _PROC_READERS_PID = os.getpid()
+    r = _PROC_READERS.get(pid)
+    if r is None:
+        try:
+            r = _PROC_READERS[pid] = _ProcReader(pid)
+        except OSError:  # pragma: no cover - /proc always present on target
+            return None
+    return r
+
+
 def os_counters(pid: str = "self") -> Dict[str, float]:
     """CPU/memory/scheduler counters from /proc — cheap enough for inner loops."""
     out: Dict[str, float] = {}
-    try:
-        with open(f"/proc/{pid}/stat", "rb") as f:
-            fields = f.read().rsplit(b")", 1)[1].split()
-        # fields are offset by 2 relative to proc(5) numbering after the comm strip
-        out["utime_s"] = int(fields[11]) / _CLK
-        out["stime_s"] = int(fields[12]) / _CLK
-        out["minflt"] = float(int(fields[7]))
-        out["majflt"] = float(int(fields[9]))
-        out["rss_bytes"] = float(int(fields[21]) * _PAGE)
-    except OSError:  # pragma: no cover - /proc always present on target
-        pass
-    try:
-        with open(f"/proc/{pid}/status") as f:
-            for line in f:
-                if line.startswith("voluntary_ctxt_switches"):
+    for _attempt in range(2):  # second pass reopens if the handles went stale
+        r = _proc_reader(pid)
+        if r is None:
+            return out
+        try:
+            r.stat.seek(0)
+            fields = r.stat.read().rsplit(b")", 1)[1].split()
+            # fields are offset by 2 relative to proc(5) numbering after the comm strip
+            out["utime_s"] = int(fields[11]) / _CLK
+            out["stime_s"] = int(fields[12]) / _CLK
+            out["minflt"] = float(int(fields[7]))
+            out["majflt"] = float(int(fields[9]))
+            out["rss_bytes"] = float(int(fields[21]) * _PAGE)
+            r.status.seek(0)
+            for line in r.status:
+                if line.startswith(b"voluntary_ctxt_switches"):
                     out["vctx"] = float(line.split()[1])
-                elif line.startswith("nonvoluntary_ctxt_switches"):
+                elif line.startswith(b"nonvoluntary_ctxt_switches"):
                     out["nvctx"] = float(line.split()[1])
-    except OSError:  # pragma: no cover
-        pass
+            return out
+        except (OSError, IndexError, ValueError):  # pragma: no cover - stale pid
+            _PROC_READERS.pop(pid, None)
+            r.close()
     return out
 
 
@@ -165,3 +211,13 @@ class TelemetryEmitter:
         if not ok:
             self.dropped += 1
         return ok
+
+    def emit_many(self, metrics_seq: Sequence[Dict[str, Any]]) -> int:
+        """Flush a batch of samples with one shared-counter round-trip
+        (:meth:`ShmRing.push_many`) instead of head-read + head-publish per
+        record; returns how many were accepted (the rest count as dropped)."""
+        payloads: List[bytes] = [
+            pack_telemetry(self.meta, self.instance_id, m) for m in metrics_seq]
+        sent = self.channel.telemetry.push_many(payloads)
+        self.dropped += len(payloads) - sent
+        return sent

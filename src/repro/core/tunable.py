@@ -76,31 +76,23 @@ class Tunable:
 
     # ------------------------------------------------------ [0,1] unit embedding
     def encode(self, value: Any) -> float:
-        """Map a concrete value into [0,1] (for the GP surrogate)."""
-        if self.kind == "categorical":
-            i = self.choices.index(value)
-            return (i + 0.5) / len(self.choices)
-        lo, hi = float(self.low), float(self.high)
-        if self.log:
-            lo, hi, value = math.log(lo), math.log(hi), math.log(float(value))
-        if hi == lo:
-            return 0.5
-        return min(1.0, max(0.0, (float(value) - lo) / (hi - lo)))
+        """Map a concrete value into [0,1] (for the GP surrogate).
+
+        Delegates to :meth:`encode_array` so scalar and batch paths share
+        one transcendental implementation — the optimizer engines dedup
+        encoded rows by raw bytes, and the two BO backends encode through
+        different paths (scalar on tell, batch on ask), so a 1-ULP
+        np.log/math.log divergence would split identical configs.
+        """
+        return float(self.encode_array([value])[0])
 
     def decode(self, u: float) -> Any:
-        """Map a point of [0,1] back into the domain (inverse of encode)."""
-        u = min(1.0, max(0.0, float(u)))
-        if self.kind == "categorical":
-            i = min(len(self.choices) - 1, int(u * len(self.choices)))
-            return self.choices[i]
-        lo, hi = float(self.low), float(self.high)
-        if self.log:
-            v = math.exp(math.log(lo) + u * (math.log(hi) - math.log(lo)))
-        else:
-            v = lo + u * (hi - lo)
-        if self.kind == "int":
-            return int(min(self.high, max(self.low, round(v))))
-        return float(v)
+        """Map a point of [0,1] back into the domain (inverse of encode).
+
+        Delegates to :meth:`decode_array` — one implementation for scalar
+        and batch paths (see :meth:`encode`).
+        """
+        return self.decode_array(np.array([float(u)]))[0]
 
     def validate(self, value: Any) -> Any:
         if self.kind == "categorical":
@@ -111,6 +103,38 @@ class Tunable:
         if not (self.low <= v <= self.high):
             raise ValueError(f"{self.name}: {v} outside [{self.low}, {self.high}]")
         return int(round(v)) if self.kind == "int" else v
+
+    # ------------------------------------------------- vectorized embedding
+    # Batch twins of encode/decode.  They must agree bit-for-bit with the
+    # scalar paths: the optimizer engines de-duplicate encoded rows by raw
+    # bytes, so a scalar/vector drift would split identical configs.
+    def encode_array(self, values: Sequence[Any]) -> np.ndarray:
+        if self.kind == "categorical":
+            idx = np.array([self.choices.index(v) for v in values], dtype=np.float64)
+            return (idx + 0.5) / len(self.choices)
+        lo, hi = float(self.low), float(self.high)
+        v = np.asarray([float(x) for x in values], dtype=np.float64)
+        if self.log:
+            if np.any(v <= 0):  # np.log would silently yield NaN/-inf here
+                raise ValueError(f"{self.name}: log scale requires positive values")
+            lo, hi, v = math.log(lo), math.log(hi), np.log(v)
+        if hi == lo:
+            return np.full(len(v), 0.5)
+        return np.minimum(1.0, np.maximum(0.0, (v - lo) / (hi - lo)))
+
+    def decode_array(self, us: np.ndarray) -> List[Any]:
+        u = np.minimum(1.0, np.maximum(0.0, np.asarray(us, dtype=np.float64)))
+        if self.kind == "categorical":
+            idx = np.minimum(len(self.choices) - 1, (u * len(self.choices)).astype(np.int64))
+            return [self.choices[int(i)] for i in idx]
+        lo, hi = float(self.low), float(self.high)
+        if self.log:
+            v = np.exp(math.log(lo) + u * (math.log(hi) - math.log(lo)))
+        else:
+            v = lo + u * (hi - lo)
+        if self.kind == "int":
+            return [int(x) for x in np.clip(np.round(v), self.low, self.high).astype(np.int64)]
+        return [float(x) for x in v]
 
 
 # Convenience constructors -------------------------------------------------------
@@ -186,6 +210,25 @@ class TunableSpace:
 
     def decode(self, x: np.ndarray) -> Dict[str, Any]:
         return {t.name: t.decode(float(u)) for t, u in zip(self, np.asarray(x, dtype=np.float64))}
+
+    def encode_batch(self, configs: Sequence[Dict[str, Any]]) -> np.ndarray:
+        """Vectorized :meth:`encode` over a batch of configs → ``(B, d)``.
+
+        One numpy op per *dimension* instead of one Python call per *value* —
+        the per-ask history embedding of the optimizers is O(d) dispatches
+        regardless of history length.
+        """
+        if not configs:
+            return np.zeros((0, len(self)), dtype=np.float64)
+        cols = [t.encode_array([c[t.name] for c in configs]) for t in self]
+        return np.stack(cols, axis=1)
+
+    def decode_batch(self, X: np.ndarray) -> List[Dict[str, Any]]:
+        """Vectorized :meth:`decode` over ``(B, d)`` rows → list of configs."""
+        X = np.atleast_2d(np.asarray(X, dtype=np.float64))
+        cols = [t.decode_array(X[:, j]) for j, t in enumerate(self)]
+        names = self.names
+        return [dict(zip(names, row)) for row in zip(*cols)] if len(X) else []
 
     def to_json(self) -> List[Dict[str, Any]]:
         return [dataclasses.asdict(t) for t in self]

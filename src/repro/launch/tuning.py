@@ -8,6 +8,7 @@ from __future__ import annotations
 
 from typing import Any, Dict
 
+from ..core.optimizers import optimizer_defaults, set_optimizer_defaults
 from ..kernels.flash_attention.ops import attention_settings
 from ..kernels.rmsnorm.ops import rmsnorm_settings
 from ..kernels.ssd.ops import ssd_settings
@@ -46,8 +47,15 @@ def parse_override(s: str) -> Dict[str, Dict[str, Any]]:
 
 def apply_overrides(overrides: Dict[str, Dict[str, Any]]) -> None:
     for comp, kv in overrides.items():
+        if comp == "optimizer":
+            # Pseudo-component: 'optimizer.backend=jax' flips every BO the
+            # launch constructs onto the jitted engine (make_optimizer default).
+            set_optimizer_defaults(**kv)
+            continue
         SINGLETONS[comp].apply_settings(kv)
 
 
 def current_settings() -> Dict[str, Dict[str, Any]]:
-    return {name: dict(inst.settings) for name, inst in SINGLETONS.items()}
+    out = {name: dict(inst.settings) for name, inst in SINGLETONS.items()}
+    out["optimizer"] = optimizer_defaults()
+    return out

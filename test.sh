@@ -9,8 +9,31 @@
 #     XLA_FLAGS is respected.
 #
 # Usage: bash test.sh [pytest args...]   e.g. bash test.sh tests/test_sharding.py -k moe
+#        bash test.sh --bench-smoke      quick perf-harness sanity: runs
+#                                        benchmarks/optimizer_throughput.py --quick
+#                                        and asserts it wrote valid JSON, so the
+#                                        tracked perf trajectory can't rot silently.
 set -euo pipefail
 cd "$(dirname "$0")"
 export PYTHONPATH="$PWD/src${PYTHONPATH:+:$PYTHONPATH}"
 export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=8}"
+
+if [[ "${1:-}" == "--bench-smoke" ]]; then
+  shift
+  python benchmarks/optimizer_throughput.py --quick "$@"
+  python - <<'PYEOF'
+import json
+d = json.load(open("results/bench/optimizer_throughput.json"))
+assert d["quick"] is True
+assert d["ask_latency_ms"], "no ask-latency points recorded"
+for n, row in d["ask_latency_ms"].items():
+    assert row["numpy"] > 0 and row["jax"] > 0 and row["speedup"] > 0, (n, row)
+assert d["batched"], "no batched points recorded"
+for n, row in d["batched"].items():
+    assert row["sessions"] >= 2 and row["batched_ms"] > 0, (n, row)
+print("bench-smoke OK:", "results/bench/optimizer_throughput.json")
+PYEOF
+  exit 0
+fi
+
 exec python -m pytest -q "$@"

@@ -142,6 +142,68 @@ def test_agent_process_end_to_end():
         chan.close()
 
 
+def test_agent_process_snapshots_optimizer_defaults():
+    """Launch-level optimizer defaults (optimizer.backend=jax) must travel
+    into the spawned daemon — the fresh interpreter re-imports the module
+    defaults, so AgentProcess snapshots them and agent_main replays them."""
+    import json as _json
+
+    from repro.core.optimizers import set_optimizer_defaults
+
+    meta = get_component("spinlock")
+    session = TuningSession.for_component(
+        meta, objective="throughput_ops_s", mode="max", optimizer="bo", budget=2)
+    chan = MlosChannel.create(capacity=1 << 12)
+    try:
+        set_optimizer_defaults(backend="jax")
+        agent = AgentProcess(chan, session)  # not started — snapshot check only
+        snap = _json.loads(agent.proc._kwargs["optimizer_defaults_json"])
+        assert snap["backend"] == "jax"
+    finally:
+        set_optimizer_defaults(backend="numpy")
+        chan.close()
+
+
+def test_os_counters_persistent_handles():
+    """Repeated samples reuse the cached /proc file objects (seek(0) + read,
+    no reopen) and stay monotone where the kernel guarantees it."""
+    from repro.core import telemetry
+
+    a = telemetry.os_counters()
+    assert {"utime_s", "stime_s", "minflt", "rss_bytes"} <= set(a)
+    reader = telemetry._PROC_READERS.get("self")
+    assert reader is not None
+    b = telemetry.os_counters()
+    assert telemetry._PROC_READERS.get("self") is reader  # same open files
+    for key in ("utime_s", "stime_s", "minflt", "majflt"):
+        assert b[key] >= a[key]
+    assert b["rss_bytes"] > 0
+
+
+def test_os_counters_recovers_from_stale_handle():
+    from repro.core import telemetry
+
+    telemetry.os_counters()
+    telemetry._PROC_READERS["self"].stat.close()  # simulate a stale handle
+    out = telemetry.os_counters()  # must evict + reopen, not raise
+    assert out.get("rss_bytes", 0) > 0
+
+
+def test_emitter_emit_many_batches():
+    meta = get_component("spinlock")
+    chan = MlosChannel.create(capacity=1 << 14)
+    try:
+        emitter = TelemetryEmitter(meta, chan)
+        lock = SpinLock()
+        batch = [spinlock_workload(lock, heavy_ops=2, seed=s) for s in range(5)]
+        assert emitter.emit_many(batch) == 5
+        drained = chan.telemetry.drain()
+        assert len(drained) == 5
+        assert drained[0] == pack_telemetry(meta, 0, batch[0])
+    finally:
+        chan.close()
+
+
 def test_tracker_roundtrip(tmp_path):
     tr = Tracker(root=str(tmp_path))
     with tr.start_run("exp1", "runA") as run:

@@ -90,6 +90,53 @@ def test_fifo_roundtrip_deterministic():
         _fifo_roundtrip(payloads)
 
 
+# -------------------------------------------------------------- push_many
+def test_push_many_fifo_and_mixing(ring):
+    msgs = [f"batch-{i}".encode() for i in range(8)]
+    assert ring.push_many(msgs) == 8
+    assert ring.push(b"single")  # batched and single producers interleave
+    assert ring.push_many([b"tail-a", b"tail-b"]) == 2
+    assert ring.drain() == msgs + [b"single", b"tail-a", b"tail-b"]
+
+
+def test_push_many_wrap_straddling_batch():
+    """A batch whose records straddle the end-of-buffer wrap: the producer
+    must emit the wrap marker mid-batch and still publish the head once."""
+    r = ShmRing(capacity=1 << 8)
+    try:
+        # Park the cursor near the end: 3×58-byte records (62 w/ header)
+        # put the write cursor at 186 of 256; drain frees the space.
+        first = [bytes([i]) * 58 for i in range(3)]
+        assert r.push_many(first) == 3
+        assert r.drain() == first
+        # 40-byte records: the second one needs the wrap marker (186+44=230,
+        # +44 > 256) — the batch straddles the boundary.
+        batch = [bytes([0x40 + i]) * 40 for i in range(4)]
+        assert r.push_many(batch) == 4
+        assert r.head // r.capacity > 0  # wrapped inside the batch
+        assert r.drain() == batch
+        assert r.pop() is None
+    finally:
+        r.close()
+        r.unlink()
+
+
+def test_push_many_partial_on_full(ring):
+    msgs = [bytes([i]) * 100 for i in range(80)]  # way beyond capacity
+    sent = ring.push_many(msgs)
+    assert 0 < sent < len(msgs)
+    assert ring.drain() == msgs[:sent]  # the accepted prefix, in order
+    assert ring.push_many(msgs[sent:sent + 2]) == 2  # space freed → resumes
+
+
+def test_push_many_oversize_rejected_before_publish(ring):
+    head_before = ring.head
+    with pytest.raises(ValueError):
+        ring.push_many([b"ok", b"y" * (1 << 12)])
+    assert ring.head == head_before  # nothing published
+    assert ring.pop() is None
+
+
 def _producer(name: str, n: int) -> None:
     r = ShmRing(name, create=False)
     sent = 0

@@ -128,3 +128,27 @@ def test_json_roundtrip():
     s2 = TunableSpace.from_json(s.to_json())
     assert s2.names == s.names
     assert s2.defaults() == s.defaults()
+
+
+def test_batch_encode_decode_match_scalar_paths():
+    """The vectorized embedding must agree bit-for-bit with the scalar one —
+    the optimizer engines dedup encoded rows by raw bytes."""
+    s = make_space()
+    rng = np.random.default_rng(3)
+    cfgs = [s.sample(rng) for _ in range(40)]
+    X = s.encode_batch(cfgs)
+    assert X.shape == (40, len(s))
+    scalar = np.stack([s.encode(c) for c in cfgs])
+    np.testing.assert_array_equal(X, scalar)  # exact, not allclose
+
+    U = rng.random((40, len(s)))
+    batch = s.decode_batch(U)
+    assert batch == [s.decode(u) for u in U]
+
+
+def test_batch_encode_decode_empty_and_shapes():
+    s = make_space()
+    assert s.encode_batch([]).shape == (0, len(s))
+    assert s.decode_batch(np.zeros((0, len(s)))) == []
+    one = s.decode_batch(np.full(len(s), 0.5))  # 1-D row promotes to (1, d)
+    assert len(one) == 1 and s.validate(one[0]) == one[0]

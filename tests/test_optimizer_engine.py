@@ -1,0 +1,312 @@
+"""JAX optimizer engine: numpy↔jax parity, incremental Cholesky, batched ask.
+
+The contracts under test:
+
+  * numpy and jax backends share candidate generation (same rng stream), so
+    with hyperparameter fitting disabled they must suggest IDENTICAL configs
+    (and acquisition scores within float tolerance) — the acceptance parity
+    criterion, 3 seeds, mixed Int/Categorical space.
+  * the rank-1 incremental factor equals the full Cholesky of the exact
+    kernel matrix (deterministic sweep; hypothesis fuzz when installed, per
+    the PR-1 convention).
+  * padded buffers bucket at powers of two; growth refactors, steady-state
+    tells don't.
+  * duplicate encodings are collapsed (best y kept) on both backends.
+  * BatchedBayesOpt == element-wise sequential asks, including mixed groups.
+  * AgentMux.observe_batch is protocol-equivalent to the serial observe loop.
+"""
+import json
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # pragma: no cover - exercised in hypothesis-less CI
+    given = None
+
+from repro.core.optimizers import BayesOpt, make_optimizer
+from repro.core.optimizers.bayesopt import dedup_rows
+from repro.core.optimizers.engine import JaxGP, BatchedBayesOpt, batched_ask, bucket_of
+from repro.core.optimizers.gaussian_process import KERNELS
+from repro.core.tunable import Categorical, Float, Int, TunableSpace
+
+
+def mixed_space():
+    return TunableSpace([
+        Int("n", 16, 4, 64),
+        Categorical("mode", "a", ("a", "b", "c")),
+        Float("w", 0.5, 0.0, 1.0),
+    ])
+
+
+def _objective(cfg):
+    return abs(cfg["n"] - 32) * 0.1 + (0.0 if cfg["mode"] == "b" else 5.0) \
+        + (cfg["w"] - 0.3) ** 2
+
+
+def _seed_history(opts, seed, k=10):
+    rng = np.random.default_rng(seed)
+    space = opts[0].space
+    for _ in range(k):
+        cfg = space.sample(rng)
+        for o in opts:
+            o.tell(cfg, _objective(cfg))
+
+
+# ----------------------------------------------------------- parity contract
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_numpy_jax_parity_identical_configs(seed):
+    """Same seed, same history ⇒ same suggested config, several steps deep."""
+    a = BayesOpt(mixed_space(), seed=seed, fit_hypers=False)
+    b = BayesOpt(mixed_space(), seed=seed, backend="jax", fit_hypers=False)
+    _seed_history([a, b], seed)
+    for _ in range(3):
+        ca, cb = a.ask(), b.ask()
+        assert ca == cb
+        a.tell(ca, _objective(ca))
+        b.tell(cb, _objective(cb))
+
+
+def test_numpy_jax_parity_acquisition_scores():
+    """The two backends score an identical candidate pool within atol."""
+    from scipy.stats import norm
+
+    from repro.core.optimizers.gaussian_process import GP
+
+    space = mixed_space()
+    a = BayesOpt(space, seed=5, fit_hypers=False)
+    b = BayesOpt(space, seed=5, backend="jax", fit_hypers=False)
+    _seed_history([a, b], 5, k=12)
+
+    X = space.encode_batch([o.config for o in a.history])
+    y = np.array([o.value for o in a.history])
+    Xd, yd = dedup_rows(X, y)
+    cand = np.random.default_rng(7).random((256, len(space)))
+
+    gp = GP(kernel="matern32", fit_hypers=False).fit(Xd, yd)
+    mu, sd = gp.predict(cand)
+    imp = float(yd.min()) - mu
+    z = imp / np.maximum(sd, 1e-12)
+    ref = np.where(sd > 1e-12, imp * norm.cdf(z) + sd * norm.pdf(z), 0.0)
+
+    eng = b._engine_for()
+    idx, scores = eng.suggest(cand, "ei", 2.0)
+    np.testing.assert_allclose(scores, ref, atol=1e-8)
+    assert idx == int(np.argmax(ref))
+
+
+# ------------------------------------------------- incremental Cholesky ====
+def _check_incremental_matches_full(seed, n, kernel):
+    rng = np.random.default_rng(seed)
+    d = 3
+    X = rng.random((n, d))
+    y = rng.standard_normal(n)
+    eng = JaxGP(d, kernel=kernel, fit_hypers=False)
+    eng.observe(X[0], y[0])
+    eng.ensure_ready()  # build the 1-row factor so later tells take rank-1 path
+    for i in range(1, n):
+        eng.observe(X[i], y[i])
+    eng.ensure_ready()
+    ls, sv, nv = eng.theta
+    K = sv * KERNELS[kernel](X, X, ls) + (nv + 1e-8) * np.eye(n)
+    np.testing.assert_allclose(
+        np.asarray(eng._L)[:n, :n], np.linalg.cholesky(K), atol=1e-8)
+
+
+def test_incremental_cholesky_equals_full_deterministic():
+    for seed, n, kernel in [(0, 12, "matern32"), (1, 16, "rbf"),
+                            (2, 30, "matern52"), (3, 40, "matern32")]:
+        _check_incremental_matches_full(seed, n, kernel)
+
+
+if given is not None:
+
+    @given(st.integers(0, 1000), st.integers(2, 24),
+           st.sampled_from(["rbf", "matern32", "matern52"]))
+    @settings(max_examples=10, deadline=None)
+    def test_incremental_cholesky_equals_full_property(seed, n, kernel):
+        _check_incremental_matches_full(seed, n, kernel)
+
+
+def test_buckets_grow_at_powers_of_two_only():
+    assert [bucket_of(n) for n in (0, 1, 16, 17, 32, 33, 200)] == \
+        [16, 16, 16, 32, 32, 64, 256]
+    eng = JaxGP(2, fit_hypers=False)
+    rng = np.random.default_rng(0)
+    eng.observe(rng.random(2), 0.0)
+    eng.ensure_ready()
+    base = eng.refactorizations
+    for _ in range(15):  # fill the first bucket: rank-1 only, no refactor
+        eng.observe(rng.random(2), float(rng.standard_normal()))
+    eng.ensure_ready()
+    assert eng.max_n == 16 and eng.refactorizations == base
+    eng.observe(rng.random(2), 0.5)  # crosses 16 → 32
+    eng.ensure_ready()
+    assert eng.max_n == 32 and eng.refactorizations == base + 1
+
+
+# -------------------------------------------------------------- dedup ======
+def test_dedup_rows_keeps_best_and_order():
+    X = np.array([[0.1, 0.2], [0.3, 0.4], [0.1, 0.2], [0.3, 0.4]])
+    y = np.array([5.0, 1.0, 3.0, 2.0])
+    Xd, yd = dedup_rows(X, y)
+    np.testing.assert_array_equal(Xd, [[0.1, 0.2], [0.3, 0.4]])
+    np.testing.assert_array_equal(yd, [3.0, 1.0])
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_collapsed_categoricals_dont_blow_up(backend):
+    """A pure-categorical space collapses every config onto ≤2 encodings;
+    the GP fit must see the deduped rows, not a singular 30-row matrix."""
+    space = TunableSpace([Categorical("flag", False, (False, True))])
+    opt = BayesOpt(space, seed=0, backend=backend, n_init=4)
+    rng = np.random.default_rng(0)
+    for _ in range(30):
+        cfg = space.sample(rng)
+        opt.tell(cfg, 0.0 if cfg["flag"] else 1.0)
+        cfg2 = opt.ask()
+        assert cfg2["flag"] in (False, True)
+    if backend == "jax":
+        assert opt._engine.n <= 2  # every duplicate folded in place
+
+
+# -------------------------------------------------------- batched ask ======
+def test_batched_ask_matches_sequential():
+    def build(seed):
+        o = BayesOpt(mixed_space(), seed=seed, backend="jax")
+        _seed_history([o], 100 + seed, k=8)
+        return o
+
+    A = [build(s) for s in range(3)]
+    B = [build(s) for s in range(3)]
+    for _ in range(2):
+        seq = [o.ask() for o in A]
+        bat = batched_ask(B)
+        assert seq == bat
+        for o, c in zip(A, seq):
+            o.tell(c, _objective(c))
+        for o, c in zip(B, bat):
+            o.tell(c, _objective(c))
+
+
+def test_batched_ask_mixed_group_falls_back():
+    """Pre-init jax BO and non-jax optimizers ride along untouched."""
+    jax_opt = BayesOpt(mixed_space(), seed=0, backend="jax")
+    _seed_history([jax_opt], 0, k=8)
+    young = BayesOpt(mixed_space(), seed=1, backend="jax")  # no history yet
+    rs = make_optimizer("rs", mixed_space(), seed=2)
+    ref = [BayesOpt(mixed_space(), seed=0, backend="jax"),
+           BayesOpt(mixed_space(), seed=1, backend="jax"),
+           make_optimizer("rs", mixed_space(), seed=2)]
+    _seed_history([ref[0]], 0, k=8)
+    assert BatchedBayesOpt([jax_opt, young, rs]).ask_all() == [o.ask() for o in ref]
+
+
+# ------------------------------------------------ mux protocol equivalence =
+def test_mux_observe_batch_equivalent_to_serial():
+    """observe_batch must route/tell/ask exactly like the serial loop —
+    same commands, same reports — for any optimizer (rs here: cheap and
+    seed-deterministic)."""
+    from repro.core import AgentMux, TuningSession, pack_telemetry
+    from repro.core.registry import get_component
+    from repro.core.smartcomponents import TunableHashTable, hashtable_workload
+
+    meta = get_component("hashtable")
+
+    def run(batched: bool):
+        sessions = [
+            TuningSession.for_component(
+                meta, objective="collisions", optimizer="rs",
+                budget=4, seed=10 + iid, instance_id=iid)
+            for iid in range(2)
+        ]
+        mux = AgentMux(sessions)
+        tables = {iid: TunableHashTable() for iid in range(2)}
+        pending = {}
+        for cmd in mux.start_commands():
+            msg = json.loads(cmd.decode())
+            pending[msg["instance"]] = msg["settings"]
+        transcript = []
+        for _ in range(50):
+            if mux.done:
+                break
+            payloads = []
+            for iid in range(2):
+                if iid not in pending:
+                    continue
+                tables[iid].apply_and_rebuild(pending.pop(iid))
+                m = hashtable_workload(tables[iid], n_keys=500, seed=1 + iid)
+                payloads.append(pack_telemetry(meta, iid, m))
+            outs = (mux.observe_batch(payloads) if batched else
+                    [o for p in payloads for o in mux.observe(p)])
+            for out in outs:
+                msg = json.loads(out.decode())
+                transcript.append(msg)
+                if msg["type"] == "config_update":
+                    pending[msg["instance"]] = msg["settings"]
+        assert mux.done
+        return transcript
+
+    serial, batched = run(False), run(True)
+    key = lambda m: (m["type"], m.get("instance"))
+    assert sorted(serial, key=key) == sorted(batched, key=key)
+
+
+def test_mux_observe_batch_with_jax_bo_matches_serial_drive():
+    """End-to-end: two bo_jax sessions through observe_batch converge to the
+    same bests as their single-session serial twins (deterministic objective
+    + engine determinism ⇒ bit-identical)."""
+    from repro.core import AgentCore, AgentMux, TuningSession, pack_telemetry
+    from repro.core.registry import get_component
+    from repro.core.smartcomponents import TunableHashTable, hashtable_workload
+
+    meta = get_component("hashtable")
+    budget = 7
+
+    def sessions():
+        return [
+            TuningSession.for_component(
+                meta, objective="collisions", optimizer="bo_jax",
+                budget=budget, seed=20 + iid, instance_id=iid)
+            for iid in range(2)
+        ]
+
+    def measure(table, iid, settings):
+        table.apply_and_rebuild(settings)
+        return hashtable_workload(table, n_keys=400, seed=2 + iid)
+
+    solo = {}
+    for s in sessions():
+        core = AgentCore(s)
+        table = TunableHashTable()
+        cmd = json.loads(core.start_command().decode())
+        while not core.done:
+            m = measure(table, s.instance_id, cmd["settings"])
+            nxt = core.observe(pack_telemetry(meta, s.instance_id, m))
+            if nxt is not None:
+                cmd = json.loads(nxt.decode())
+        solo[s.instance_id] = core.best.value
+
+    mux = AgentMux(sessions())
+    tables = {iid: TunableHashTable() for iid in range(2)}
+    pending = {}
+    for cmd in mux.start_commands():
+        msg = json.loads(cmd.decode())
+        pending[msg["instance"]] = msg["settings"]
+    for _ in range(100):
+        if mux.done:
+            break
+        payloads = []
+        for iid in range(2):
+            if iid in pending:
+                m = measure(tables[iid], iid, pending.pop(iid))
+                payloads.append(pack_telemetry(meta, iid, m))
+        for out in mux.observe_batch(payloads):
+            msg = json.loads(out.decode())
+            if msg["type"] == "config_update":
+                pending[msg["instance"]] = msg["settings"]
+    assert mux.done
+    for (comp, iid), core in mux.cores.items():
+        assert core.evaluations == budget
+        assert core.best.value == solo[iid]
