@@ -1,0 +1,149 @@
+"""Configstore round-trip: per-context tuning that SURVIVES the process.
+
+The acceptance demo for context-keyed settings resolution: one run tunes the
+same component (``flash_attention``) under two distinct workload signatures,
+both session bests persist into ``results/configstore/`` keyed by their full
+context, and a FRESH interpreter resolves each back by context — the same op
+now dispatches different tuned settings at (b=1, s=256) and (b=4, s=512).
+
+Also measures what the resolution layer costs: the first (uncached) store
+lookup and the amortized per-call cost of the LRU-cached resolver — recorded
+to ``results/bench/configstore_resolve.json`` so the hot-path overhead is
+tracked, not assumed.
+
+    PYTHONPATH=src python benchmarks/configstore_roundtrip.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+from pathlib import Path
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import TuningSession, drive_session, promote_session_report
+from repro.core import configstore
+from repro.core.registry import get_component
+from repro.core.tunable import Categorical, TunableSpace
+from repro.kernels.flash_attention import ops as attn_ops
+from repro.launch.microbench import median_time_us
+
+CONTEXT_SHAPES = {
+    # workload signature → concrete call shape (distinct pow2 buckets)
+    "small": dict(b=1, s=256, h=8, k=4, d=64),
+    "large": dict(b=4, s=512, h=8, k=4, d=64),
+}
+
+_RESOLVE_CHILD = """
+import json, sys
+from repro.core import configstore
+from repro.kernels.flash_attention import ops as attn_ops
+out = {}
+for wl in json.loads(sys.argv[1]):
+    out[wl] = attn_ops.attention_settings.settings_for(wl)
+print(json.dumps(out))
+"""
+
+
+def _tuned_space(meta) -> TunableSpace:
+    """The component's space minus 'pallas': interpret-mode timing is
+    meaningless on CPU, and a config must never persist with a measurement
+    taken for a different impl than the one stored."""
+    impl = meta.space["impl"]
+    choices = tuple(c for c in impl.choices if c != "pallas")
+    return TunableSpace([Categorical("impl", "unrolled", choices),
+                         meta.space["block_q"], meta.space["block_kv"]])
+
+
+def _measure(shape: Dict[str, int], settings: Dict[str, Any]) -> Dict[str, float]:
+    b, s, h, k, d = shape["b"], shape["s"], shape["h"], shape["k"], shape["d"]
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (b, s, h, d), jnp.float32)
+    kk = jax.random.normal(key, (b, s, k, d), jnp.float32)
+    vv = jax.random.normal(key, (b, s, k, d), jnp.float32)
+    fn = jax.jit(lambda q, kk, vv: attn_ops.flash_attention(
+        q, kk, vv, impl=settings["impl"], block_q=settings["block_q"],
+        block_kv=settings["block_kv"]))
+    return {"time_us": median_time_us(fn, q, kk, vv), "hlo_flops": 0.0, "hlo_bytes": 0.0}
+
+
+def run(budget: int = 8, lookups: int = 20000) -> Dict[str, Any]:
+    meta = get_component("flash_attention")
+    store = configstore.default_store()
+    res: Dict[str, Any] = {"contexts": {}, "budget": budget}
+
+    # -- tune: one session per workload context, bests promoted to the store
+    workloads = {}
+    for i, (name, shape) in enumerate(CONTEXT_SHAPES.items()):
+        wl = attn_ops.workload_signature(shape["b"], shape["s"], shape["s"], shape["d"])
+        workloads[name] = wl
+        session = TuningSession.for_component(
+            meta, objective="time_us", workload=wl, optimizer="rs",
+            budget=budget, seed=17 + i)
+        session.space_json = _tuned_space(meta).to_json()
+        core = drive_session(session, lambda s, shape=shape: _measure(shape, s))
+        report = json.loads(core.session_report().decode())
+        assert promote_session_report(store, report), "promotion must succeed (no RPI gate here)"
+        res["contexts"][name] = {"workload": wl, "best_config": report["best_config"],
+                                 "best_time_us": report["best_value"]}
+        print(f"  tuned {meta.name}@{wl}: {report['best_config']} "
+              f"({report['best_value']:.0f} us over {report['evaluations']} evals)")
+
+    # -- both bests persisted under DISTINCT contexts
+    sigs = list(workloads.values())
+    assert len(set(sigs)) == 2, f"workload signatures must differ: {sigs}"
+    for name, wl in workloads.items():
+        entry = store.resolve_entry(configstore.context_for(meta.name, wl))
+        assert entry is not None, f"no stored entry for {wl}"
+        assert entry["context"]["workload"] == wl, "resolution crossed contexts"
+        assert entry["settings"] == res["contexts"][name]["best_config"]
+
+    # -- resolver overhead: uncached store hit vs the LRU-cached hot path
+    configstore.invalidate_cache()
+    t0 = time.perf_counter()
+    attn_ops.attention_settings.settings_for(sigs[0])
+    uncached_ms = (time.perf_counter() - t0) * 1e3
+    t0 = time.perf_counter()
+    for _ in range(lookups):
+        attn_ops.attention_settings.settings_for(sigs[0])
+    cached_ns = (time.perf_counter() - t0) / lookups * 1e9
+    res["resolve"] = {"uncached_first_ms": uncached_ms,
+                      "cached_ns_per_lookup": cached_ns, "lookups": lookups}
+    print(f"  resolver: first lookup {uncached_ms:.2f} ms, "
+          f"cached {cached_ns:.0f} ns/call over {lookups} calls")
+
+    # -- cross-process: a fresh interpreter resolves each context from disk
+    child = subprocess.run(
+        [sys.executable, "-c", _RESOLVE_CHILD, json.dumps(sigs)],
+        capture_output=True, text=True, timeout=300)
+    assert child.returncode == 0, child.stderr[-1000:]
+    resolved = json.loads(child.stdout.strip().splitlines()[-1])
+    for name, wl in workloads.items():
+        got = {k: resolved[wl][k] for k in res["contexts"][name]["best_config"]}
+        assert got == res["contexts"][name]["best_config"], (name, got)
+    res["fresh_process_resolution"] = "ok"
+    print("  fresh process resolved both contexts from results/configstore/")
+    return res
+
+
+def main() -> Dict[str, Any]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="smoke budget")
+    args = ap.parse_args()
+    res = run(budget=4 if args.quick else 8,
+              lookups=5000 if args.quick else 20000)
+    res["quick"] = args.quick
+    out = Path("results/bench")
+    out.mkdir(parents=True, exist_ok=True)
+    (out / "configstore_resolve.json").write_text(json.dumps(res, indent=1))
+    print(f"configstore round-trip OK → {out / 'configstore_resolve.json'}")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -9,17 +9,16 @@ step time; here the XLA-CPU instance is the hardware being tuned for).
 from __future__ import annotations
 
 import json
-import time
 from pathlib import Path
 from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.optimizers import make_optimizer
 from repro.core.tunable import Categorical, Int, TunableSpace
 from repro.kernels.flash_attention import ops as attn_ops
+from repro.launch.microbench import median_time_us
 
 SHAPE = dict(b=2, s=1024, h=8, k=4, d=64)
 SPACE = TunableSpace([
@@ -38,13 +37,7 @@ def _measure(cfg: Dict[str, Any]) -> float:
     vv = jax.random.normal(key, (b, s, k, d), jnp.float32)
     fn = jax.jit(lambda q, kk, vv: attn_ops.flash_attention(
         q, kk, vv, impl=cfg["impl"], block_q=cfg["block_q"], block_kv=cfg["block_kv"]))
-    fn(q, kk, vv).block_until_ready()  # compile
-    times = []
-    for _ in range(3):
-        t0 = time.perf_counter()
-        fn(q, kk, vv).block_until_ready()
-        times.append(time.perf_counter() - t0)
-    return float(np.median(times) * 1e6)
+    return median_time_us(fn, q, kk, vv)
 
 
 def run(budget: int = BUDGET) -> Dict[str, Any]:

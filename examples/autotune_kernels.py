@@ -9,15 +9,13 @@ applies them to the registered component via its generated hooks.
 
     PYTHONPATH=src python examples/autotune_kernels.py
 """
-import time
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import AgentClient, AgentProcess, MlosChannel, TelemetryEmitter, TuningSession
 from repro.core.registry import get_component
 from repro.kernels.flash_attention import ops as attn_ops
+from repro.launch.microbench import median_time_us
 
 SHAPE = dict(b=2, s=512, h=8, k=4, d=64)
 BUDGET = 12
@@ -34,13 +32,7 @@ def measure(settings) -> float:
         impl = "unrolled"
     fn = jax.jit(lambda q, kk, vv: attn_ops.flash_attention(
         q, kk, vv, impl=impl, block_q=settings["block_q"], block_kv=settings["block_kv"]))
-    fn(q, kk, vv).block_until_ready()
-    ts = []
-    for _ in range(3):
-        t0 = time.perf_counter()
-        fn(q, kk, vv).block_until_ready()
-        ts.append(time.perf_counter() - t0)
-    return float(np.median(ts) * 1e6)
+    return median_time_us(fn, q, kk, vv)
 
 
 def main() -> None:

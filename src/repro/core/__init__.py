@@ -7,13 +7,16 @@ Layers (paper §2.1):
   agent             — side-car daemon hosting optimizers for online tuning
   telemetry         — app metrics + OS (/proc) + compiled-HLO "HW" counters
   tracking          — MLflow-like experiment store
+  configstore       — persistent, context-keyed store of tuned configurations
   rpi               — Resource Performance Interfaces (perf-regression gates)
   optimizers        — RandomSearch / Grid / One-at-a-time / GP-BO (Matern-3/2)
   smartcomponents   — paper-faithful demo components (hashtable, spinlock)
 """
-from .agent import AgentClient, AgentCore, AgentMux, AgentProcess, TrackedInstance, TuningSession, drive_session
+from .agent import (AgentClient, AgentCore, AgentMux, AgentProcess, TrackedInstance,
+                    TuningSession, drive_session, promote_session_report)
 from .channel import MlosChannel, ShmRing
 from .codegen import generate_source, load_generated, pack_telemetry, unpack_telemetry
+from .configstore import ConfigStore, Context, context_for, default_store, resolve_settings
 from .registry import MetricSpec, all_components, get_component, tunable_component
 from .rpi import RPI, Bound, RpiReport, assert_rpi
 from .telemetry import Stopwatch, TelemetryEmitter, collective_bytes, hlo_counters, os_counters
@@ -22,9 +25,10 @@ from .tunable import Bool, Categorical, Float, Int, Tunable, TunableSpace
 
 __all__ = [
     "AgentClient", "AgentCore", "AgentMux", "AgentProcess", "TrackedInstance",
-    "TuningSession", "drive_session",
+    "TuningSession", "drive_session", "promote_session_report",
     "MlosChannel", "ShmRing",
     "generate_source", "load_generated", "pack_telemetry", "unpack_telemetry",
+    "ConfigStore", "Context", "context_for", "default_store", "resolve_settings",
     "MetricSpec", "all_components", "get_component", "tunable_component",
     "RPI", "Bound", "RpiReport", "assert_rpi",
     "Stopwatch", "TelemetryEmitter", "collective_bytes", "hlo_counters", "os_counters",

@@ -51,7 +51,7 @@ from .registry import ComponentMeta, MetricSpec
 from .tunable import TunableSpace
 
 __all__ = ["TuningSession", "AgentCore", "AgentMux", "AgentProcess", "AgentClient",
-           "TrackedInstance", "drive_session"]
+           "TrackedInstance", "drive_session", "promote_session_report"]
 
 _CONTROL_STOP = b"\x00STOP"
 _HEADER = struct.Struct("<II")  # (component_id, instance_id) telemetry prefix
@@ -59,7 +59,14 @@ _HEADER = struct.Struct("<II")  # (component_id, instance_id) telemetry prefix
 
 @dataclasses.dataclass
 class TuningSession:
-    """Everything the agent needs to tune one component *instance*."""
+    """Everything the agent needs to tune one component *instance*.
+
+    ``context`` is the config-store coordinate of what is being tuned
+    (component × workload signature × hardware × sw — see
+    :mod:`repro.core.configstore`): it travels with the session into the
+    spawned agent, comes back attached to the ``session_report``, and keys
+    where the session's best config persists.
+    """
 
     component: str
     component_id: int
@@ -73,10 +80,16 @@ class TuningSession:
     samples_per_config: int = 1
     budget: int = 50
     seed: int = 0
+    context: Optional[Dict[str, str]] = None
 
     @classmethod
-    def for_component(cls, meta: ComponentMeta, objective: str, **kw: Any) -> "TuningSession":
+    def for_component(cls, meta: ComponentMeta, objective: str,
+                      workload: Optional[str] = None, **kw: Any) -> "TuningSession":
         fmt = "<II" + "".join(m.fmt for m in meta.metrics)
+        if workload is not None and "context" not in kw:
+            from .configstore import context_for
+
+            kw["context"] = context_for(meta.name, workload).to_dict()
         return cls(
             component=meta.name,
             component_id=meta.component_id,
@@ -199,7 +212,13 @@ class AgentCore:
         return self._command(cfg)
 
     def session_report(self) -> Optional[bytes]:
-        """Final per-session summary for the host (None before any tell)."""
+        """Final per-session summary for the host (None before any tell).
+
+        Carries everything the host needs to *promote* the best config into
+        the config store: the context it was tuned under, the objective and
+        mode (so the raw best objective can be recovered from the internally
+        minimized value), and the budget for provenance.
+        """
         best = self.opt.best
         if best is None:
             return None
@@ -211,6 +230,10 @@ class AgentCore:
                 "best_config": best.config,
                 "best_value": best.value,
                 "evaluations": self.evaluations,
+                "objective": self.session.objective,
+                "mode": self.session.mode,
+                "budget": self.session.budget,
+                "context": self.session.context,
             }
         ).encode()
 
@@ -462,6 +485,52 @@ def drive_session(session: TuningSession, measure: Any) -> AgentCore:
     return core
 
 
+def promote_session_report(store: Any, msg: Dict[str, Any], *,
+                           rpi: Any = None, run: Any = None) -> bool:
+    """Persist a finished session's best config into the config store.
+
+    This is the producer half of the paper's tune → validate → persist →
+    redeploy loop: the session's context keys the entry, ``rpi`` (when given)
+    gates the promotion on the learned performance envelope, and provenance
+    (run id, budget, best objective, evaluations) rides along — logged into
+    the tracked ``run`` as well, so the experiment store can answer "where
+    did this config come from".  Returns False when the report carries no
+    context or the RPI check rejects it.
+    """
+    from .configstore import Context
+
+    if not msg.get("context"):
+        return False
+    ctx = Context.from_dict(msg["context"])
+    # Internal values are minimized; recover the raw objective for the gate.
+    best_objective = -msg["best_value"] if msg.get("mode") == "max" else msg["best_value"]
+    objective = msg.get("objective", "objective")
+    metrics = {objective: best_objective}
+    if rpi is not None:
+        # A session report only carries its objective, so only objective
+        # bounds are enforceable here; bounds on other metrics would read as
+        # "missing from measurement" violations and veto every promotion.
+        # Those stay the job of the full-measurement assert_rpi gates.
+        bounds = tuple(b for b in rpi.bounds if b.metric in metrics)
+        rpi = dataclasses.replace(rpi, bounds=bounds) if bounds else None
+    provenance = {
+        "run_id": getattr(run, "run_id", None),
+        "budget": msg.get("budget"),
+        "evaluations": msg.get("evaluations"),
+        "objective": objective,
+        "best_objective": best_objective,
+    }
+    ok = store.promote(ctx, msg["best_config"], rpi=rpi, metrics=metrics,
+                       provenance=provenance)
+    if run is not None:
+        run.log_metric(f"{ctx.component}@{ctx.workload}/{objective}", best_objective)
+        run.set_tags({f"{ctx.component}@{ctx.workload}":
+                      "promoted" if ok else "rejected_rpi"})
+        if ok:
+            run.log_params({f"{ctx.component}@{ctx.workload}": msg["best_config"]})
+    return ok
+
+
 class TrackedInstance:
     """Host-side wrapper for the multiplexed drive loop: remembers that a
     config landed (``dirty``) so the driver knows this instance needs a fresh
@@ -488,12 +557,23 @@ class AgentClient:
     can host many instances of the same component, each driven by its own
     agent session (the paper's instance-level tuning).  ``register(name,
     inst)`` without an id keeps the legacy single-instance shape (id 0).
+
+    When constructed with a ``store``, session reports that carry a context
+    are promoted into it as they arrive (:func:`promote_session_report`) —
+    gated per context by ``rpi_lookup(component, workload) -> RPI | None``
+    and tracked against ``run`` when given.  ``promotions`` records each
+    attempt as ``(context_dict, promoted?)``.
     """
 
-    def __init__(self, channel: MlosChannel):
+    def __init__(self, channel: MlosChannel, store: Any = None,
+                 rpi_lookup: Any = None, run: Any = None):
         self.channel = channel
+        self.store = store
+        self.rpi_lookup = rpi_lookup
+        self.run = run
         self._instances: Dict[Tuple[str, int], Any] = {}
         self.reports: List[Dict[str, Any]] = []
+        self.promotions: List[Tuple[Dict[str, str], bool]] = []
 
     def register(self, name: str, instance: Any, instance_id: int = 0) -> None:
         self._instances[(name, instance_id)] = instance
@@ -523,3 +603,9 @@ class AgentClient:
                     applied += 1
             elif msg["type"] == "session_report":
                 self.reports.append(msg)
+                if self.store is not None and msg.get("context"):
+                    ctx = msg["context"]
+                    rpi = (self.rpi_lookup(ctx["component"], ctx["workload"])
+                           if self.rpi_lookup else None)
+                    ok = promote_session_report(self.store, msg, rpi=rpi, run=self.run)
+                    self.promotions.append((ctx, ok))

@@ -23,7 +23,8 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Type
 
 from .tunable import Tunable, TunableSpace
 
-__all__ = ["MetricSpec", "ComponentMeta", "tunable_component", "get_component", "all_components", "clear_registry"]
+__all__ = ["MetricSpec", "ComponentMeta", "tunable_component", "get_component",
+           "all_components", "clear_registry", "settings_for", "default_instance"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,6 +51,26 @@ class ComponentMeta:
 
 _REGISTRY: Dict[str, ComponentMeta] = {}
 _BY_ID: Dict[int, ComponentMeta] = {}
+# First-constructed instance per component: the global-default settings tier
+# that context resolution falls back to (the legacy module singletons).
+_DEFAULT_INSTANCE: Dict[str, Any] = {}
+
+
+def _sanitize_settings(space: TunableSpace, s: Dict[str, Any]) -> Dict[str, Any]:
+    """Domain-check settings resolved from the config store.  Entries are
+    written by other processes/versions and never trusted on the hot path:
+    unknown keys drop, values outside the tunable's current domain (a renamed
+    impl, a narrowed range) fall back to the declared default instead of
+    crashing a jit trace."""
+    out = {}
+    for k, v in s.items():
+        if k not in space:
+            continue
+        try:
+            out[k] = space[k].validate(v)
+        except (TypeError, ValueError):
+            out[k] = space[k].default
+    return out
 
 
 def _next_id() -> int:
@@ -84,6 +105,11 @@ def tunable_component(
         def __init__(self, *args: Any, **kwargs: Any) -> None:
             overrides = {k: kwargs.pop(k) for k in list(kwargs) if k in space}
             self.settings = space.validate(overrides)
+            # Keys someone SET this process (constructor / apply_settings):
+            # they outrank persisted config-store entries in settings_for —
+            # a live operator/agent decision beats yesterday's tune.
+            self._explicit_settings = set(overrides)
+            _DEFAULT_INSTANCE.setdefault(comp_name, self)
             orig_init(self, *args, **kwargs)
 
         cls.__init__ = __init__
@@ -93,8 +119,38 @@ def tunable_component(
             merged = dict(self.settings)
             merged.update(updates)
             self.settings = space.validate(merged)
+            self._explicit_settings = getattr(self, "_explicit_settings", set()) | set(updates)
 
         cls.apply_settings = apply_settings
+
+        @functools.lru_cache(maxsize=256)
+        def _sanitized(items: Tuple[Tuple[str, Any], ...]) -> Dict[str, Any]:
+            # Memoized per resolved item-tuple, so a cache hit costs one
+            # dict build, not a re-validate.
+            return _sanitize_settings(space, dict(items))
+
+        def settings_for(self, workload: str = "*") -> Dict[str, Any]:
+            """Context-resolved settings for one workload signature.
+
+            Tiers, strongest first (see :mod:`repro.core.configstore`):
+            in-process context override → keys explicitly set on this
+            instance this process (``apply_settings`` keeps working — and
+            keeps winning — unchanged) → persisted tuned entry (exact →
+            partial match) → this instance's live ``settings``.  Resolution
+            is LRU-cached: the same workload string always yields the same
+            values, so shape-keyed callers never flip settings mid-trace.
+            """
+            from .configstore import resolve_settings
+
+            s = resolve_settings(comp_name, workload, defaults=self.settings,
+                                 explicit=getattr(self, "_explicit_settings", None))
+            if s is self.settings:
+                return s  # no context data: the live global tier, untouched
+            # Copy the memoized dict: a caller mutating its result must not
+            # poison later resolutions of the same context.
+            return dict(_sanitized(tuple(s.items())))
+
+        cls.settings_for = settings_for
         return cls
 
     return wrap
@@ -110,7 +166,36 @@ def all_components() -> List[ComponentMeta]:
     return list(_REGISTRY.values())
 
 
+def default_instance(name: str) -> Optional[Any]:
+    """First-constructed instance of a component (the module singleton)."""
+    return _DEFAULT_INSTANCE.get(name)
+
+
+def settings_for(context: Any) -> Dict[str, Any]:
+    """Resolve settings for a :class:`~repro.core.configstore.Context`.
+
+    Module-level twin of the per-instance ``settings_for`` hook for callers
+    that hold a Context rather than a component instance (launch tooling,
+    reports).  All four context coordinates are honored — a wildcard
+    hardware/sw means "this process's fingerprints".  The global-default
+    tier is the component's first-constructed instance when one exists,
+    else the declared tunable defaults.
+    """
+    from .configstore import WILDCARD, resolve_settings
+
+    meta = get_component(context.component)
+    inst = default_instance(context.component)
+    defaults = inst.settings if inst is not None else meta.space.defaults()
+    s = resolve_settings(
+        context.component, context.workload, defaults=defaults,
+        explicit=getattr(inst, "_explicit_settings", None),
+        hardware=None if context.hardware == WILDCARD else context.hardware,
+        sw=None if context.sw == WILDCARD else context.sw)
+    return s if s is defaults else _sanitize_settings(meta.space, s)
+
+
 def clear_registry() -> None:
     """Test helper."""
     _REGISTRY.clear()
     _BY_ID.clear()
+    _DEFAULT_INSTANCE.clear()

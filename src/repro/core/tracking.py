@@ -63,17 +63,25 @@ class Run:
         p.write_text(content)
         return p
 
-    def end(self, status: str = "FINISHED") -> None:
+    def end(self, status: str = "FINISHED", error: Optional[str] = None) -> None:
+        """Idempotent: a run already ended (or double-__exit__ed) stays ended
+        with its first verdict — crash paths can call this unconditionally."""
+        if self._metrics_f.closed:
+            return
         self._meta["status"] = status
         self._meta["end_time"] = time.time()
+        if error is not None:
+            self._meta["error"] = error
         self._flush_meta()
         self._metrics_f.close()
 
     def __enter__(self) -> "Run":
         return self
 
-    def __exit__(self, et: Any, *exc: Any) -> None:
-        self.end("FAILED" if et else "FINISHED")
+    def __exit__(self, et: Any, ev: Any, tb: Any) -> None:
+        # A crashing run must not leak the metrics handle or stay RUNNING
+        # forever: mark FAILED and record what killed it.
+        self.end("FAILED" if et else "FINISHED", error=repr(ev) if et else None)
 
 
 @dataclass

@@ -12,11 +12,13 @@ from typing import Optional
 
 import jax
 
+from ...core.configstore import bucket_pow2
 from ...core.registry import MetricSpec, tunable_component
 from ...core.tunable import Categorical, Int
 from . import ref
 
-__all__ = ["flash_attention", "decode_attention", "attention_settings", "AttentionKernelSettings"]
+__all__ = ["flash_attention", "decode_attention", "attention_settings",
+           "AttentionKernelSettings", "workload_signature"]
 
 
 @tunable_component(
@@ -41,6 +43,14 @@ class AttentionKernelSettings:
 attention_settings = AttentionKernelSettings()
 
 
+def workload_signature(b: int, s_q: int, s_kv: int, d: int) -> str:
+    """Bucketed call-shape signature — the workload axis of the config
+    context.  Batch and sequence bucket at powers of two (a (b=2,s=512) call
+    and a (b=8,s=4096) call are *different* workloads with their own tuned
+    block sizes); head_dim is structural and kept exact."""
+    return f"b{bucket_pow2(b)}q{bucket_pow2(s_q)}k{bucket_pow2(s_kv)}d{d}"
+
+
 def _align(block: int, seq: int) -> int:
     block = min(block, seq)
     while seq % block:
@@ -52,9 +62,13 @@ def flash_attention(
     q: jax.Array, k: jax.Array, v: jax.Array, *,
     causal: bool = True, window: int = 0, q_offset: int = 0,
     impl: Optional[str] = None, block_q: Optional[int] = None, block_kv: Optional[int] = None,
+    workload: Optional[str] = None,
 ) -> jax.Array:
-    """Attention entry point used by the model; dispatches on tunables."""
-    s = attention_settings.settings
+    """Attention entry point used by the model; dispatches on tunables
+    resolved for this call's workload context (shape-derived unless pinned
+    via ``workload=``), falling back to the global singleton settings."""
+    wl = workload or workload_signature(q.shape[0], q.shape[1], k.shape[1], q.shape[3])
+    s = attention_settings.settings_for(wl)
     impl = impl or s["impl"]
     block_q = _align(block_q or s["block_q"], q.shape[1])
     block_kv = _align(block_kv or s["block_kv"], k.shape[1])

@@ -5,11 +5,12 @@ from typing import Optional
 
 import jax
 
+from ...core.configstore import bucket_pow2
 from ...core.registry import MetricSpec, tunable_component
 from ...core.tunable import Categorical, Int
 from . import ref
 
-__all__ = ["rmsnorm", "rmsnorm_settings", "RmsNormSettings"]
+__all__ = ["rmsnorm", "rmsnorm_settings", "RmsNormSettings", "workload_signature"]
 
 
 @tunable_component(
@@ -28,10 +29,20 @@ class RmsNormSettings:
 rmsnorm_settings = RmsNormSettings()
 
 
+def workload_signature(rows: int, d: int) -> str:
+    """Bucketed (total rows, feature dim) — the op is row-parallel, so the
+    flattened row count is the workload axis that moves the best tile."""
+    return f"r{bucket_pow2(rows)}d{d}"
+
+
 def rmsnorm(x: jax.Array, scale: jax.Array, residual: Optional[jax.Array] = None,
             eps: float = 1e-5, *, impl: Optional[str] = None,
-            block_rows: Optional[int] = None) -> jax.Array:
-    s = rmsnorm_settings.settings
+            block_rows: Optional[int] = None, workload: Optional[str] = None) -> jax.Array:
+    rows = 1
+    for n in x.shape[:-1]:
+        rows *= n
+    wl = workload or workload_signature(rows, x.shape[-1])
+    s = rmsnorm_settings.settings_for(wl)
     impl = impl or s["impl"]
     if impl == "jnp":
         return ref.rmsnorm(x, scale, residual, eps)

@@ -5,11 +5,12 @@ from typing import Optional
 
 import jax
 
+from ...core.configstore import bucket_pow2
 from ...core.registry import MetricSpec, tunable_component
 from ...core.tunable import Categorical, Int
 from . import ref
 
-__all__ = ["ssd", "ssd_decode_step", "ssd_settings", "SsdKernelSettings"]
+__all__ = ["ssd", "ssd_decode_step", "ssd_settings", "SsdKernelSettings", "workload_signature"]
 
 
 @tunable_component(
@@ -34,9 +35,17 @@ def _align(chunk: int, seq: int) -> int:
     return max(chunk, 1)
 
 
+def workload_signature(b: int, s: int, h: int) -> str:
+    """Bucketed (batch, seq, heads) — the chunk decomposition trades per-chunk
+    matmul size against the inter-chunk scan length, so the best chunk tracks
+    the sequence bucket."""
+    return f"b{bucket_pow2(b)}s{bucket_pow2(s)}h{h}"
+
+
 def ssd(x, dt, A, B, C, D=None, *, impl: Optional[str] = None, chunk: Optional[int] = None,
-        init_state=None, return_state: bool = False):
-    s = ssd_settings.settings
+        init_state=None, return_state: bool = False, workload: Optional[str] = None):
+    wl = workload or workload_signature(x.shape[0], x.shape[1], x.shape[2])
+    s = ssd_settings.settings_for(wl)
     impl = impl or s["impl"]
     chunk = _align(chunk or s["chunk"], x.shape[1])
     if impl == "naive":

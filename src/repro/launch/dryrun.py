@@ -28,7 +28,9 @@ from ..core.telemetry import hlo_counters, os_counters
 from .mesh import HW, make_production_mesh
 from .shapes import SHAPES, cell_status
 from .specs import build_cell, depth_units
-from .tuning import SINGLETONS, apply_overrides, current_settings, parse_override
+from ..core import configstore
+from ..core.optimizers import optimizer_defaults, set_optimizer_defaults
+from .tuning import SINGLETONS, apply_overrides, current_settings, parse_override, split_target
 
 # Counter-pass impl mapping: XLA cost analysis counts while-loop bodies ONCE,
 # so the scanned production program undercounts FLOPs/collectives by ~the trip
@@ -46,17 +48,83 @@ _COUNTER_IMPL_MAP = {
 
 @contextlib.contextmanager
 def _temp_settings(overrides):
-    saved = {k: dict(SINGLETONS[k].settings) for k in overrides}
+    """Scoped apply_overrides: every tier (global singleton, optimizer
+    defaults, context-targeted store override) is restored on exit —
+    including each singleton's explicit-set bookkeeping, so a temporary
+    counter-pass override doesn't permanently pin keys against the store."""
+    saved, saved_ctx, saved_opt = {}, {}, None
+    store = configstore.default_store()
+    for target in overrides:
+        comp, workload = split_target(target)
+        if workload:
+            saved_ctx[(comp, workload)] = store.get_override(comp, workload)
+        elif comp == "optimizer":
+            saved_opt = optimizer_defaults()
+        else:
+            inst = SINGLETONS[comp]
+            saved[comp] = (dict(inst.settings), set(getattr(inst, "_explicit_settings", ())))
     try:
         apply_overrides(overrides)
         yield
     finally:
-        for k, v in saved.items():
-            SINGLETONS[k].apply_settings(v)
+        for k, (settings, explicit) in saved.items():
+            SINGLETONS[k].settings = settings  # pre-validated snapshot
+            SINGLETONS[k]._explicit_settings = explicit
+        if saved_opt is not None:
+            set_optimizer_defaults(**saved_opt)
+        for (comp, workload), prev in saved_ctx.items():
+            store.clear_override(comp, workload)
+            if prev:
+                store.set_override(comp, workload, prev)
+
+
+def _redeploy_stored_cell_configs(workload):
+    """The redeploy step of tune → validate → persist → REDEPLOY: settings
+    persisted for exactly this cell context (perf.hillclimb winners) are
+    applied for the cell's duration.  Keys the operator/agent explicitly set
+    this process (e.g. ``--set``) are left alone.  Afterwards every singleton
+    is PINNED (all keys marked explicit) for the cell: the dry-run's roofline
+    attribution — counter impl remaps, the pallas HBM adjustment — assumes
+    the compile runs exactly the settings recorded in ``rec['settings']``,
+    so shape-keyed store entries must not silently resolve underneath it
+    (context-targeted ``comp@wl`` --set overrides still outrank the pin).
+    Returns (applied, undo); never raises — stale entries are skipped."""
+    store = configstore.default_store()
+    saved, applied = [], {}
+    for comp, inst in SINGLETONS.items():
+        explicit = set(getattr(inst, "_explicit_settings", ()))
+        saved.append((inst, dict(inst.settings), explicit))
+        try:
+            entry = store.resolve_entry(configstore.context_for(comp, workload))
+        except Exception as e:  # noqa: BLE001 — unreadable store ≠ dead sweep
+            print(f"[configstore] skipping store for {comp}@{workload}: {e}")
+            entry = None
+        kv = {}
+        if entry is not None and entry["context"].get("workload") == workload:
+            # exact cell matches only: no cross-cell reuse here
+            kv = {k: v for k, v in entry["settings"].items()
+                  if k not in explicit and k in inst.settings}
+        if kv:
+            try:
+                inst.apply_settings(kv)
+                applied[comp] = kv
+            except Exception as e:  # noqa: BLE001 — a stale/hand-edited entry
+                # (value no longer in the tunable's domain) must not crash
+                # the sweep or leave this component half-applied; skip it.
+                inst.settings = dict(saved[-1][1])
+                print(f"[configstore] skipping stale entry {comp}@{workload}: {e}")
+        inst._explicit_settings = set(inst.settings)  # pin for the cell
+
+    def undo():
+        for inst, settings, expl in saved:
+            inst.settings = settings
+            inst._explicit_settings = expl
+
+    return applied, undo
 
 
 def _counter_overrides(seq_len: int) -> dict:
-    cur = current_settings()
+    cur = current_settings(contexts=False)  # global-tier reads only
     return {
         "layer_stack": {"scan_layers": False,
                         "loss_chunk": min(seq_len, 16384)},
@@ -100,6 +168,10 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
         rec["status"] = "skip"
         rec["reason"] = reason
         return rec
+    applied, undo = _redeploy_stored_cell_configs(f"{arch}/{shape_name}/{rec['mesh']}")
+    if applied:
+        rec["stored_cell_settings"] = applied
+        rec["settings"] = current_settings()  # refresh: reflect the redeploy
     try:
         # ---- production pass: the deliverable compile (scanned, full depth).
         # memory_analysis proves the per-chip fit; its compile succeeding for
@@ -163,7 +235,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
             rec["counter_passes"] = {"k1": cs[0], "k2": cs[1], "units": K}
             # Pallas flash attention keeps scores in VMEM: model its HBM
             # traffic instead of the jnp fallback's (see launch/adjust.py)
-            if current_settings()["flash_attention"]["impl"] == "pallas" and not cfg.attn_free:
+            if current_settings(contexts=False)["flash_attention"]["impl"] == "pallas" and not cfg.attn_free:
                 from .adjust import attention_adjustment
 
                 adj = attention_adjustment(cfg, shape, mesh, plan.rules)
@@ -191,6 +263,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
         rec["status"] = "error"
         rec["error"] = f"{type(e).__name__}: {e}"
         rec["traceback"] = traceback.format_exc(limit=25)
+    finally:
+        undo()
     return rec
 
 

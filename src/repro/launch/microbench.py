@@ -1,0 +1,30 @@
+"""Shared micro-timing harness: warmup + median-of-k on jitted callables.
+
+One implementation for every autotuning objective in the repo (the example
+deployment, the kernel-autotune benchmark, the configstore smoke) so their
+numbers are comparable and the warmup/median policy has one home.  Wall-clock
+median over ``reps`` repetitions after ``warmup`` discarded calls; the first
+warmup call absorbs jit compilation.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+__all__ = ["median_time_us"]
+
+
+def median_time_us(fn: Callable[..., Any], *args: Any, warmup: int = 1,
+                   reps: int = 3) -> float:
+    """Median wall-clock microseconds of ``fn(*args)`` (device-synchronized)."""
+    for _ in range(max(warmup, 0)):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(max(reps, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)

@@ -20,6 +20,9 @@ import sys
 from pathlib import Path
 from typing import Any, Dict, List, Optional
 
+from ..core import configstore
+from .tuning import parse_override, split_target
+
 # Candidate moves.  `predict` is the napkin estimate (recorded verbatim in the
 # log, then marked confirmed/refuted against the measurement).
 CANDIDATES: List[Dict[str, Any]] = [
@@ -86,6 +89,34 @@ def _dryrun(arch: str, shape: str, mesh: str, tag: str, sets: List[str],
 
 def _terms(rec: Dict[str, Any]) -> Dict[str, float]:
     return rec["roofline"]
+
+
+def persist_best(arch: str, shape: str, mesh: str, best_sets: List[str],
+                 summary: Dict[str, Any]) -> List[str]:
+    """Persist the cell's winning overrides into the config store, keyed by
+    the cell as the workload context — the next launch of this cell resolves
+    them instead of re-deriving (performance knowledge survives across runs,
+    the SPE-in-DevOps stance).  Returns the contexts written."""
+    if not best_sets:
+        return []
+    store = configstore.default_store()
+    cell = f"{arch}/{shape}/{mesh}"
+    merged: Dict[tuple, Dict[str, Any]] = {}
+    for s in best_sets:
+        for target, kv in parse_override(s).items():
+            comp, wl = split_target(target)
+            # Context-targeted sets keep their own workload key; plain global
+            # sets are filed under the cell they were tuned in.
+            merged.setdefault((comp, wl or cell), {}).update(kv)
+    written = []
+    for (comp, wl), kv in merged.items():
+        if comp == "optimizer":
+            continue  # process default, not a component config
+        store.put(configstore.context_for(comp, wl), kv,
+                  provenance={"source": "perf.hillclimb", "cell": cell,
+                              "speedup_step_bound": summary["speedup_step_bound"]})
+        written.append(f"{comp}@{wl}")
+    return written
 
 
 def hillclimb(arch: str, shape: str, mesh: str = "single", out: str = "results/dryrun",
@@ -175,12 +206,16 @@ def hillclimb(arch: str, shape: str, mesh: str = "single", out: str = "results/d
         "speedup_step_bound": max(_terms(base).values()) / max(_terms(best).values()),
         "log": log,
     }
+    summary["persisted_contexts"] = persist_best(arch, shape, mesh, best_sets, summary)
     lp = Path(log_path or f"results/perf/{arch}__{shape}__{mesh}.json")
     lp.parent.mkdir(parents=True, exist_ok=True)
     lp.write_text(json.dumps(summary, indent=1))
     print(f"\nstep bound {max(_terms(base).values())*1e3:.1f} → "
           f"{max(_terms(best).values())*1e3:.1f} ms "
           f"({summary['speedup_step_bound']:.2f}x); log → {lp}")
+    if summary["persisted_contexts"]:
+        print(f"persisted tuned configs → results/configstore/ "
+              f"({', '.join(summary['persisted_contexts'])})")
     return summary
 
 

@@ -1,14 +1,29 @@
 """Bridge between MLOS component settings and the launch CLIs.
 
 The framework's auto-parameters live on module-level smart-component
-singletons; this module gives launchers/optimizers one flat namespace:
-``component.key=value`` strings → ``apply_settings`` calls.
+singletons (the *global-default* tier); tuned per-context values live in the
+:mod:`repro.core.configstore`.  This module gives launchers/optimizers one
+flat namespace over both:
+
+  * ``component.key=value``              — global override (legacy, unchanged)
+  * ``component@workload.key=value``     — targets ONE workload context, e.g.
+    ``flash_attention@b2q512k512d64.block_q=256`` (in-process override tier;
+    outranks stored entries for that context only)
+  * ``optimizer.backend=jax``            — the optimizer pseudo-component,
+    cast through the same declared-spec path as real components.
+
+Values are cast using the target component's *tunable spec*, not guessed from
+their spelling: a ``Categorical`` whose choice is the string ``"1"`` arrives
+as ``"1"``, and booleans/ints/floats land as their declared types.
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any, Dict, Tuple
 
+from ..core import configstore
 from ..core.optimizers import optimizer_defaults, set_optimizer_defaults
+from ..core.registry import get_component
+from ..core.tunable import Categorical, Tunable, TunableSpace
 from ..kernels.flash_attention.ops import attention_settings
 from ..kernels.rmsnorm.ops import rmsnorm_settings
 from ..kernels.ssd.ops import ssd_settings
@@ -16,7 +31,8 @@ from ..models.moe import moe_settings
 from ..models.transformer import stack_settings
 from ..runtime.serve_loop import serve_settings
 
-__all__ = ["SINGLETONS", "apply_overrides", "current_settings", "parse_override"]
+__all__ = ["SINGLETONS", "OPTIMIZER_SPACE", "apply_overrides", "current_settings",
+           "parse_override", "split_target"]
 
 SINGLETONS = {
     "flash_attention": attention_settings,
@@ -27,26 +43,68 @@ SINGLETONS = {
     "serve_batching": serve_settings,
 }
 
+# Declared spec for the 'optimizer' pseudo-component so its overrides are
+# cast and validated exactly like a registered component's.
+OPTIMIZER_SPACE = TunableSpace([
+    Categorical("backend", "numpy", ("numpy", "jax"),
+                description="BO suggest engine for launch-constructed optimizers"),
+])
+
+
+def _space_of(comp: str) -> TunableSpace:
+    if comp == "optimizer":
+        return OPTIMIZER_SPACE
+    return get_component(comp).space
+
+
+def _cast(t: Tunable, val: str) -> Any:
+    """Cast a CLI string using the tunable's declared kind."""
+    if t.kind == "categorical":
+        for c in t.choices:
+            if val == c or str(c) == val:
+                return c
+        # Bools read naturally from the CLI ('true'/'false', any case).
+        lowered = {str(c).lower(): c for c in t.choices}
+        if val.lower() in lowered:
+            return lowered[val.lower()]
+        raise ValueError(f"{t.name}: {val!r} not in {t.choices}")
+    if t.kind == "int":
+        return int(round(float(val)))
+    return float(val)
+
+
+def split_target(target: str) -> Tuple[str, str]:
+    """'flash_attention@b2q512k512d64' → ('flash_attention', 'b2q512k512d64');
+    plain component names return an empty workload."""
+    comp, _, workload = target.partition("@")
+    return comp, workload
+
 
 def parse_override(s: str) -> Dict[str, Dict[str, Any]]:
-    """'layer_stack.remat=dots' → {'layer_stack': {'remat': 'dots'}}."""
+    """'layer_stack.remat=dots' → {'layer_stack': {'remat': 'dots'}}.
+
+    Context form keeps the target intact: 'comp@wl.key=v' → {'comp@wl': ...}.
+    Raises for unknown components/tunables and uncastable values at parse
+    time, before anything is applied.
+    """
     key, _, val = s.partition("=")
-    comp, _, field = key.partition(".")
-    for cast in (int, float):
-        try:
-            val = cast(val)  # type: ignore[assignment]
-            break
-        except (TypeError, ValueError):
-            continue
-    if val in ("True", "true"):
-        val = True
-    if val in ("False", "false"):
-        val = False
-    return {comp: {field: val}}
+    target, _, field = key.partition(".")
+    comp, _ = split_target(target)
+    space = _space_of(comp)
+    if field not in space:
+        raise ValueError(f"{comp}: unknown tunable {field!r} (have {space.names})")
+    return {target: {field: _cast(space[field], val)}}
 
 
 def apply_overrides(overrides: Dict[str, Dict[str, Any]]) -> None:
-    for comp, kv in overrides.items():
+    for target, kv in overrides.items():
+        comp, workload = split_target(target)
+        if workload:
+            # Context-targeted: lands in the store's override tier, which
+            # outranks persisted entries for exactly that workload.
+            kv = _space_of(comp).subset(list(kv)).validate(kv)
+            configstore.default_store().set_override(comp, workload, kv)
+            continue
         if comp == "optimizer":
             # Pseudo-component: 'optimizer.backend=jax' flips every BO the
             # launch constructs onto the jitted engine (make_optimizer default).
@@ -55,7 +113,16 @@ def apply_overrides(overrides: Dict[str, Dict[str, Any]]) -> None:
         SINGLETONS[comp].apply_settings(kv)
 
 
-def current_settings() -> Dict[str, Dict[str, Any]]:
+def current_settings(contexts: bool = True) -> Dict[str, Dict[str, Any]]:
+    """Flat settings report: the global tier under plain component names,
+    plus (when ``contexts``) one ``comp@workload`` entry per context known to
+    the config store — each fully resolved through the fallback chain."""
     out = {name: dict(inst.settings) for name, inst in SINGLETONS.items()}
     out["optimizer"] = optimizer_defaults()
+    if contexts:
+        for comp, workload in configstore.default_store().contexts():
+            inst = SINGLETONS.get(comp)
+            if inst is None or not workload or workload == configstore.WILDCARD:
+                continue
+            out[f"{comp}@{workload}"] = inst.settings_for(workload)
     return out

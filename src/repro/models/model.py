@@ -22,7 +22,8 @@ from .config import ModelConfig
 from .layers import P, apply_norm, dtype_of, init_leaf, norm_params
 from .ssm import ssm_state_spec
 from .transformer import (block_specs, decode_stack, forward_stack,
-                          prefill_stack, stack_settings, stack_specs)
+                          prefill_stack, stack_settings, stack_specs,
+                          stack_workload)
 
 __all__ = [
     "param_specs", "init_params", "forward", "loss_fn", "logits_fn",
@@ -113,7 +114,8 @@ def _chunked_ce(h: jax.Array, w: jax.Array, labels: jax.Array, cfg: ModelConfig)
     """Next-token CE over sequence chunks (the (B,S,V) logits tensor is never
     materialized; the chunk body is rematerialized in the backward pass)."""
     b, s, d = h.shape
-    chunk = min(stack_settings.settings["loss_chunk"], s)
+    wl = stack_workload(cfg.family, b, s, cfg.n_layers)
+    chunk = min(stack_settings.settings_for(wl)["loss_chunk"], s)
     while s % chunk:
         chunk //= 2
     n = s // chunk

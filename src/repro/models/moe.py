@@ -23,13 +23,15 @@ import jax
 import jax.numpy as jnp
 
 from ..compat import shard_map
+from ..core.configstore import bucket_pow2
 from ..core.registry import MetricSpec, tunable_component
 from ..core.tunable import Categorical, Float
 from ..parallel.sharding import constrain
 from .config import ModelConfig
 from .layers import P
 
-__all__ = ["moe_params", "apply_moe", "moe_settings", "MoeSettings", "router_aux_loss"]
+__all__ = ["moe_params", "apply_moe", "moe_settings", "MoeSettings", "router_aux_loss",
+           "workload_signature"]
 
 
 @tunable_component(
@@ -47,6 +49,14 @@ class MoeSettings:
 
 
 moe_settings = MoeSettings()
+
+
+def workload_signature(tokens: int, n_experts: int, top_k: int) -> str:
+    """Bucketed token count × routing shape: capacity_factor trades dropped
+    tokens against padded expert slots, and the right trade moves with
+    tokens-per-expert — a (t=1k, E=8) batch and a (t=32k, E=64) batch are
+    different workloads."""
+    return f"t{bucket_pow2(tokens)}e{n_experts}k{top_k}"
 
 
 def moe_params(cfg: ModelConfig) -> Dict[str, P]:
@@ -176,9 +186,12 @@ def apply_moe(
     *,
     strategy: Optional[str] = None,
     capacity_factor: Optional[float] = None,
+    workload: Optional[str] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Returns (y, aux_loss)."""
-    s = moe_settings.settings
+    wl = workload or workload_signature(x.shape[0] * x.shape[1],
+                                        cfg.moe_num_experts, cfg.moe_top_k)
+    s = moe_settings.settings_for(wl)
     strategy = strategy or s["strategy"]
     cf = capacity_factor or s["capacity_factor"]
 

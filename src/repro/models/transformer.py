@@ -21,6 +21,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..core.configstore import bucket_pow2
 from ..core.registry import MetricSpec, tunable_component
 from ..core.tunable import Categorical, Int
 from ..parallel.sharding import constrain
@@ -32,7 +33,7 @@ from .ssm import apply_ssm, apply_ssm_decode, ssm_params
 
 __all__ = [
     "stack_settings", "block_specs", "stack_specs", "forward_stack",
-    "decode_stack", "prefill_stack", "remat_wrap",
+    "decode_stack", "prefill_stack", "remat_wrap", "stack_workload",
 ]
 
 
@@ -53,6 +54,13 @@ class StackSettings:
 
 
 stack_settings = StackSettings()
+
+
+def stack_workload(kind: str, b: int, s: int, n_layers: int) -> str:
+    """Bucketed stack-call signature: family × batch × seq × depth.  A train
+    pass at (b=8, s=4096) and a decode step at (b=1, s=1) resolve their own
+    remat/scan/loss-chunk choices."""
+    return f"{kind}_b{bucket_pow2(b)}s{bucket_pow2(s)}l{n_layers}"
 
 
 # --------------------------------------------------------------------- specs
@@ -87,10 +95,11 @@ def stack_specs(specs: Dict[str, Any], n: int) -> Dict[str, Any]:
 
 
 # ------------------------------------------------------------------- helpers
-def _maybe_scan(body: Callable, carry: Any, xs: Any, length: int):
-    """lax.scan, or a python unroll when scan_layers=False (the dry-run's
-    counter passes unroll so XLA cost analysis sees every iteration)."""
-    if stack_settings.settings["scan_layers"]:
+def _maybe_scan(body: Callable, carry: Any, xs: Any, length: int, *, scan: bool):
+    """lax.scan, or a python unroll when scan=False (the dry-run's counter
+    passes unroll so XLA cost analysis sees every iteration).  The stack
+    entry points pass their context-resolved ``scan_layers`` value."""
+    if scan:
         return jax.lax.scan(body, carry, xs, length=length)
     ys = []
     for i in range(length):
@@ -155,7 +164,7 @@ def forward_stack(
     For the vlm family, ``stacked`` is {"xblocks": (G,...), "blocks": (G,period,...)}.
     """
     kind = cfg.family if kind == "auto" else kind
-    s = stack_settings.settings
+    s = stack_settings.settings_for(stack_workload(kind, x.shape[0], x.shape[1], cfg.n_layers))
 
     if kind == "vlm":
         def group(carry, lp):
@@ -168,8 +177,9 @@ def forward_stack(
 
         groups = cfg.n_layers // cfg.cross_attn_period
         (x, aux), _ = _maybe_scan(
-            remat_wrap(group), (x, jnp.zeros((), jnp.float32)),
-            {"xb": stacked["xblocks"], "blocks": stacked["blocks"]}, groups)
+            remat_wrap(group, s["remat"]), (x, jnp.zeros((), jnp.float32)),
+            {"xb": stacked["xblocks"], "blocks": stacked["blocks"]}, groups,
+            scan=s["scan_layers"])
         return x, aux
 
     def body(carry, lp):
@@ -178,7 +188,8 @@ def forward_stack(
         return (xx, aux + a), None
 
     n = n_layers if n_layers is not None else (cfg.enc_layers if kind == "encoder" else cfg.n_layers)
-    (x, aux), _ = _maybe_scan(remat_wrap(body), (x, jnp.zeros((), jnp.float32)), stacked, n)
+    (x, aux), _ = _maybe_scan(remat_wrap(body, s["remat"]), (x, jnp.zeros((), jnp.float32)),
+                              stacked, n, scan=s["scan_layers"])
     return x, aux
 
 
@@ -200,6 +211,7 @@ def prefill_stack(
     kind = cfg.family if kind == "auto" else kind
     sl = x.shape[1]
     cap = cfg.cache_len(cache_capacity)
+    s_cfg = stack_settings.settings_for(stack_workload(kind, x.shape[0], sl, cfg.n_layers))
 
     def pad_kv(k: jax.Array) -> jax.Array:
         # keep last `cap` positions, left-pad if the sequence is shorter
@@ -250,8 +262,8 @@ def prefill_stack(
             h, (xk, xv) = apply_attn(lp["xb"]["xattn"], xn, cfg, xkv=xattn_src, return_kv=True)
             xx = _res(xx + h)
             (xx, a), inner = _maybe_scan(
-                remat_wrap(body_dense), (xx, jnp.zeros((), jnp.float32)), lp["blocks"],
-                cfg.cross_attn_period)
+                remat_wrap(body_dense, s_cfg["remat"]), (xx, jnp.zeros((), jnp.float32)),
+                lp["blocks"], cfg.cross_attn_period, scan=s_cfg["scan_layers"])
             return (xx, aux + a), {"xk": xk, "xv": xv, "inner": inner}
 
         def body_dense(carry, lp):
@@ -260,14 +272,14 @@ def prefill_stack(
         saved_kind = kind
         kind = "dense"
         (x, aux), caches = _maybe_scan(
-            remat_wrap(group), (x, jnp.zeros((), jnp.float32)),
+            remat_wrap(group, s_cfg["remat"]), (x, jnp.zeros((), jnp.float32)),
             {"xb": stacked["xblocks"], "blocks": stacked["blocks"]},
-            cfg.n_layers // cfg.cross_attn_period)
+            cfg.n_layers // cfg.cross_attn_period, scan=s_cfg["scan_layers"])
         kind = saved_kind
         return x, caches
 
-    (x, _aux), caches = _maybe_scan(remat_wrap(body), (x, jnp.zeros((), jnp.float32)),
-                                    stacked, cfg.n_layers)
+    (x, _aux), caches = _maybe_scan(remat_wrap(body, s_cfg["remat"]), (x, jnp.zeros((), jnp.float32)),
+                                    stacked, cfg.n_layers, scan=s_cfg["scan_layers"])
     return x, caches
 
 
@@ -288,6 +300,8 @@ def decode_stack(
     entire KV cache (measured +6.4 GB/device on deepseek-67B decode_32k).
     """
     kind = cfg.family if kind == "auto" else kind
+    scan = stack_settings.settings_for(
+        stack_workload(kind, x.shape[0], x.shape[1], cfg.n_layers))["scan_layers"]
 
     def body(xx, lp_cache):
         lp, cache = lp_cache
@@ -344,7 +358,8 @@ def decode_stack(
 
             (xx, inner_stack), _ = _maybe_scan(
                 inner, (xx, cache["inner"]),
-                (lp["blocks"], jnp.arange(cfg.cross_attn_period)), cfg.cross_attn_period)
+                (lp["blocks"], jnp.arange(cfg.cross_attn_period)), cfg.cross_attn_period,
+                scan=scan)
             cstack = _put(cstack, {"xk": cache["xk"], "xv": cache["xv"], "inner": inner_stack}, i)
             return (xx, cstack), None
 
@@ -354,7 +369,7 @@ def decode_stack(
         (x, caches), _ = _maybe_scan(
             group, (x, caches),
             ({"xb": stacked["xblocks"], "blocks": stacked["blocks"]}, jnp.arange(groups)),
-            groups)
+            groups, scan=scan)
         kind = saved
         return x, caches
 
@@ -365,5 +380,6 @@ def decode_stack(
         return (xx, _put(cstack, new_cache, i)), None
 
     (x, caches), _ = _maybe_scan(layer, (x, caches),
-                                 (stacked, jnp.arange(cfg.n_layers)), cfg.n_layers)
+                                 (stacked, jnp.arange(cfg.n_layers)), cfg.n_layers,
+                                 scan=scan)
     return x, caches

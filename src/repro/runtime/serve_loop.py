@@ -17,12 +17,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.configstore import bucket_pow2
 from ..core.registry import MetricSpec, tunable_component
 from ..core.tunable import Int
 from ..models import model as M
 from ..models.config import ModelConfig
 
-__all__ = ["serve_settings", "ServeSettings", "BatchedServer"]
+__all__ = ["serve_settings", "ServeSettings", "BatchedServer", "workload_signature"]
 
 
 @tunable_component(
@@ -38,6 +39,13 @@ class ServeSettings:
 
 
 serve_settings = ServeSettings()
+
+
+def workload_signature(family: str, capacity: int) -> str:
+    """Model family × bucketed cache capacity: the admission batch that
+    maximizes tokens/s for short-context chat is not the one for long-context
+    decode, so each serving deployment resolves its own batching."""
+    return f"{family}_c{bucket_pow2(capacity)}"
 
 
 @dataclasses.dataclass
@@ -59,9 +67,10 @@ class BatchedServer:
     """
 
     def __init__(self, params: Any, cfg: ModelConfig, capacity: int = 256,
-                 eos_id: int = 1):
+                 eos_id: int = 1, workload: Optional[str] = None):
         self.params, self.cfg, self.capacity, self.eos_id = params, cfg, capacity, eos_id
-        self.max_batch = serve_settings.settings["max_batch"]
+        self.workload = workload or workload_signature(cfg.family, capacity)
+        self.max_batch = serve_settings.settings_for(self.workload)["max_batch"]
         self._decode = jax.jit(
             lambda p, tok, caches, pos: M.decode_step(p, cfg, tok, caches, pos))
         self.queue: Deque[_Request] = deque()
@@ -91,7 +100,7 @@ class BatchedServer:
 
     def run(self, max_new_tokens: Optional[int] = None) -> Dict[str, float]:
         """Serve everything currently queued; returns throughput metrics."""
-        budget = max_new_tokens or serve_settings.settings["max_new_tokens"]
+        budget = max_new_tokens or serve_settings.settings_for(self.workload)["max_new_tokens"]
         total_tokens = 0
         t0 = time.perf_counter()
         while self.queue:

@@ -11,7 +11,8 @@
 # Usage: bash test.sh [pytest args...]   e.g. bash test.sh tests/test_sharding.py -k moe
 #        bash test.sh --bench-smoke      quick perf-harness sanity: runs
 #                                        benchmarks/optimizer_throughput.py --quick
-#                                        and asserts it wrote valid JSON, so the
+#                                        and benchmarks/configstore_roundtrip.py --quick
+#                                        and asserts both wrote valid JSON, so the
 #                                        tracked perf trajectory can't rot silently.
 set -euo pipefail
 cd "$(dirname "$0")"
@@ -32,6 +33,20 @@ assert d["batched"], "no batched points recorded"
 for n, row in d["batched"].items():
     assert row["sessions"] >= 2 and row["batched_ms"] > 0, (n, row)
 print("bench-smoke OK:", "results/bench/optimizer_throughput.json")
+PYEOF
+  # Configstore round-trip: two flash_attention contexts tuned in one run,
+  # distinct bests persisted, a fresh process resolves each, lookup cost recorded.
+  python benchmarks/configstore_roundtrip.py --quick
+  python - <<'PYEOF'
+import json
+d = json.load(open("results/bench/configstore_resolve.json"))
+assert d["quick"] is True
+assert d["fresh_process_resolution"] == "ok"
+wls = [c["workload"] for c in d["contexts"].values()]
+assert len(wls) == 2 and len(set(wls)) == 2, wls
+assert d["resolve"]["cached_ns_per_lookup"] > 0
+assert d["resolve"]["uncached_first_ms"] > 0
+print("bench-smoke OK:", "results/bench/configstore_resolve.json")
 PYEOF
   exit 0
 fi

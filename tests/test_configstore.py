@@ -1,0 +1,303 @@
+"""Context-keyed config store: fallback chain, persistence, promotion gate.
+
+Covers the tentpole acceptance surface: exact-context hits, partial-context
+fallback, global-default misses, cross-process persistence (a ``spawn`` child
+writes, the parent resolves), RPI-gated promotion, the launch override
+grammar (``component@workload.key=value``), and spec-based override casting.
+"""
+import json
+import multiprocessing
+
+import pytest
+
+from repro.core import TuningSession, Tracker, promote_session_report
+from repro.core import configstore
+from repro.core.configstore import ConfigStore, Context
+from repro.core.registry import get_component, settings_for
+from repro.core.rpi import RPI, Bound
+from repro.kernels.flash_attention import ops as attn_ops
+from repro.launch.tuning import apply_overrides, current_settings, parse_override
+
+
+@pytest.fixture
+def store(tmp_path):
+    st = ConfigStore(root=str(tmp_path / "configstore"))
+    old = configstore.set_default_store(st)
+    yield st
+    configstore.set_default_store(old)
+
+
+def _ctx(workload, hardware="hw0", sw="sw0"):
+    return Context("flash_attention", workload, hardware, sw)
+
+
+# --------------------------------------------------------------- fallback chain
+def test_exact_context_hit(store):
+    store.put(_ctx("b2q512k512d64"), {"block_q": 256})
+    store.put(_ctx("b8q4096k4096d64"), {"block_q": 1024})
+    assert store.resolve(_ctx("b2q512k512d64")) == {"block_q": 256}
+    assert store.resolve(_ctx("b8q4096k4096d64")) == {"block_q": 1024}
+
+
+def test_partial_context_fallback_prefers_specific(store):
+    # Same workload tuned under an older sw still beats the global default…
+    store.put(_ctx("b2q512k512d64", sw="jax-0.4"), {"block_q": 512})
+    assert store.resolve(_ctx("b2q512k512d64", sw="jax-0.5")) == {"block_q": 512}
+    # …but an exact-sw entry outranks it.
+    store.put(_ctx("b2q512k512d64", sw="jax-0.5"), {"block_q": 128})
+    assert store.resolve(_ctx("b2q512k512d64", sw="jax-0.5")) == {"block_q": 128}
+    # Component-wide ("*" workload) entries are the weakest stored tier.
+    store.put(_ctx("*"), {"block_q": 777})
+    assert store.resolve(_ctx("b2q512k512d64", sw="jax-0.5")) == {"block_q": 128}
+    assert store.resolve(_ctx("never_tuned")) == {"block_q": 777}
+    # A "*" QUERY (no workload info) must not pick up shape-specific tunes —
+    # only the component-wide entry is eligible.
+    assert store.resolve(_ctx("*", sw="jax-0.5")) == {"block_q": 777}
+
+
+def test_wildcard_query_never_matches_specific_entries(store):
+    store.put(_ctx("b2q512k512d64"), {"block_q": 256})
+    assert store.resolve(_ctx("*")) is None
+    assert attn_ops.attention_settings.settings_for() is attn_ops.attention_settings.settings
+
+
+def test_global_default_miss(store):
+    store.put(_ctx("b2q512k512d64"), {"block_q": 256})
+    assert store.resolve(_ctx("other", hardware="hw1")) is None  # different workload
+    # settings_for falls back to the LIVE singleton dict, uncopied.
+    s = attn_ops.attention_settings.settings_for("never_tuned_workload")
+    assert s is attn_ops.attention_settings.settings
+
+
+def test_settings_for_merges_partial_entry_over_defaults(store):
+    wl = "b2q512k512d64"
+    store.put(configstore.context_for("flash_attention", wl), {"block_q": 256})
+    s = attn_ops.attention_settings.settings_for(wl)
+    assert s["block_q"] == 256
+    assert s["impl"] == attn_ops.attention_settings.settings["impl"]  # default tier
+    # Module-level twin resolves through the registered default instance.
+    s2 = settings_for(configstore.context_for("flash_attention", wl))
+    assert s2 == s
+
+
+def test_module_settings_for_honors_pinned_hardware(store):
+    wl = "b2q512k512d64"
+    store.put(_ctx(wl, hardware="tpu-v5e"), {"block_q": 1024})
+    store.put(_ctx(wl, hardware="cpu-host"), {"block_q": 128})
+    assert settings_for(Context("flash_attention", wl, "tpu-v5e", "sw0"))["block_q"] == 1024
+    assert settings_for(Context("flash_attention", wl, "cpu-host", "sw0"))["block_q"] == 128
+
+
+def test_explicit_global_setting_beats_stored_entry(store):
+    """apply_settings this process is a live operator/agent decision: it must
+    not be silently shadowed by yesterday's persisted tune (the dry-run's
+    counter passes depend on this)."""
+    wl = "b2q512k512d64"
+    store.put(configstore.context_for("flash_attention", wl),
+              {"impl": "naive", "block_q": 1024})
+    inst = attn_ops.attention_settings
+    saved_s, saved_e = dict(inst.settings), set(inst._explicit_settings)
+    try:
+        assert inst.settings_for(wl)["impl"] == "naive"  # store wins pre-override
+        inst.apply_settings({"impl": "unrolled"})
+        s = inst.settings_for(wl)
+        assert s["impl"] == "unrolled"  # explicitly set → outranks the entry
+        assert s["block_q"] == 1024     # untouched keys still resolve from the store
+        # …but a context-targeted override still outranks the explicit global.
+        apply_overrides(parse_override(f"flash_attention@{wl}.impl=scan"))
+        assert inst.settings_for(wl)["impl"] == "scan"
+    finally:
+        store.clear_override("flash_attention", wl)
+        inst.settings, inst._explicit_settings = saved_s, saved_e
+
+
+def test_stale_store_entry_sanitized_on_resolve(store):
+    """Entries written by other versions are never trusted on the hot path:
+    out-of-domain values fall back to declared defaults, unknown keys drop."""
+    wl = "b2q512k512d64"
+    store.put(configstore.context_for("flash_attention", wl),
+              {"impl": "triton", "block_q": 256, "bogus_key": 7})
+    s = attn_ops.attention_settings.settings_for(wl)
+    assert s["impl"] == "unrolled"  # removed/renamed choice → declared default
+    assert s["block_q"] == 256      # valid keys still apply
+    assert "bogus_key" not in s
+
+
+def test_corrupted_store_file_fails_soft(store):
+    wl = "b2q512k512d64"
+    store.root.mkdir(parents=True, exist_ok=True)
+    (store.root / "flash_attention.json").write_text("{truncated")
+    assert store.resolve(_ctx(wl)) is None
+    assert attn_ops.attention_settings.settings_for(wl) is attn_ops.attention_settings.settings
+
+
+def test_put_merges_with_concurrent_writers(store):
+    store.put(_ctx("wl1"), {"block_q": 128})  # populates store's entry cache
+    other = ConfigStore(root=str(store.root))  # a second writer, same files
+    other.put(_ctx("wl2"), {"block_q": 256})
+    store.put(_ctx("wl3"), {"block_q": 512})  # must merge, not clobber wl2
+    fresh = ConfigStore(root=str(store.root))
+    assert {e["context"]["workload"] for e in fresh._entries("flash_attention")} == \
+        {"wl1", "wl2", "wl3"}
+
+
+def test_resolver_cache_tracks_store_generation(store):
+    wl = "b2q512k512d64"
+    assert attn_ops.attention_settings.settings_for(wl) is attn_ops.attention_settings.settings
+    store.put(configstore.context_for("flash_attention", wl), {"block_q": 999})
+    assert attn_ops.attention_settings.settings_for(wl)["block_q"] == 999  # write invalidates
+    a = attn_ops.attention_settings.settings_for(wl)
+    b = attn_ops.attention_settings.settings_for(wl)
+    assert a == b  # stable across calls → shape-keyed callers never flip mid-trace
+
+
+# ------------------------------------------------------- cross-process persistence
+def _child_put(root, ctx_dict, settings):
+    ConfigStore(root=root).put(Context.from_dict(ctx_dict), settings)
+
+
+def test_cross_process_persistence(store):
+    ctx = _ctx("b4q1024k1024d64")
+    proc = multiprocessing.get_context("spawn").Process(
+        target=_child_put, args=(str(store.root), ctx.to_dict(), {"block_q": 640}))
+    proc.start()
+    proc.join(120)
+    assert proc.exitcode == 0
+    configstore.invalidate_cache()  # parent may hold a pre-write cache
+    assert store.resolve(ctx) == {"block_q": 640}
+
+
+# ----------------------------------------------------------------- promotion gate
+def test_rpi_gated_promotion(store):
+    ctx = _ctx("b2q512k512d64")
+    rpi = RPI("flash_attention", ctx.workload, (Bound("time_us", high=100.0),))
+    ok = store.promote(ctx, {"block_q": 256}, rpi=rpi, metrics={"time_us": 500.0})
+    assert not ok and store.resolve(ctx) is None  # violates envelope → rejected
+    ok = store.promote(ctx, {"block_q": 256}, rpi=rpi, metrics={"time_us": 50.0})
+    assert ok and store.resolve(ctx) == {"block_q": 256}
+
+
+def test_promote_session_report_roundtrip(store, tmp_path):
+    meta = get_component("flash_attention")
+    session = TuningSession.for_component(meta, objective="time_us",
+                                          workload="b2q512k512d64", budget=5)
+    assert session.context["component"] == "flash_attention"
+    assert session.context["workload"] == "b2q512k512d64"
+    msg = {"type": "session_report", "component": meta.name, "instance": 0,
+           "best_config": {"impl": "scan", "block_q": 256, "block_kv": 512},
+           "best_value": 42.0, "evaluations": 5, "objective": "time_us",
+           "mode": "min", "budget": 5, "context": session.context}
+    rpi = RPI("flash_attention", "b2q512k512d64", (Bound("time_us", high=10.0),))
+    with Tracker(root=str(tmp_path / "runs")).start_run("tune") as run:
+        assert not promote_session_report(store, msg, rpi=rpi, run=run)  # 42 > 10
+        assert store.resolve(Context.from_dict(session.context)) is None
+        assert promote_session_report(store, msg, run=run)  # ungated
+    entry = store.resolve_entry(Context.from_dict(session.context))
+    assert entry["settings"]["impl"] == "scan"
+    assert entry["provenance"]["run_id"] == run.run_id
+    assert entry["provenance"]["budget"] == 5
+    assert entry["provenance"]["best_objective"] == 42.0
+    # Bounds on metrics the report cannot carry (hlo_bytes) must not veto:
+    # only the objective bound is enforceable at this gate.
+    rpi_multi = RPI("flash_attention", "b2q512k512d64",
+                    (Bound("time_us", high=100.0), Bound("hlo_bytes", high=1e9)))
+    assert promote_session_report(store, msg, rpi=rpi_multi)
+
+
+# ----------------------------------------------------------- launch override grammar
+def test_parse_override_casts_via_spec():
+    assert parse_override("layer_stack.remat=dots") == {"layer_stack": {"remat": "dots"}}
+    assert parse_override("flash_attention.block_q=256") == {"flash_attention": {"block_q": 256}}
+    assert parse_override("moe_dispatch.capacity_factor=1.5") == {"moe_dispatch": {"capacity_factor": 1.5}}
+    # Bool categorical reads naturally and lands as a real bool.
+    assert parse_override("layer_stack.scan_layers=false") == {"layer_stack": {"scan_layers": False}}
+    with pytest.raises(ValueError):
+        parse_override("layer_stack.remat=bogus")
+    with pytest.raises(ValueError):
+        parse_override("layer_stack.nonexistent=1")
+
+
+def test_parse_override_string_digit_categorical():
+    """A Categorical whose choice is the string "1" must arrive as "1", not
+    int(1) — the guess-casting bug the spec-based path fixes."""
+    from repro.core.registry import tunable_component
+    from repro.core.tunable import Categorical
+
+    @tunable_component(name="cfgtest_strdigit",
+                       tunables=(Categorical("level", default="1", choices=("1", "2")),))
+    class _CfgTest:
+        pass
+
+    inst = _CfgTest()
+    cast = parse_override("cfgtest_strdigit.level=2")["cfgtest_strdigit"]
+    assert cast == {"level": "2"}
+    inst.apply_settings(cast)  # guess-cast int(2) would raise here
+    assert inst.settings["level"] == "2"
+
+
+def test_parse_override_optimizer_pseudo_component():
+    assert parse_override("optimizer.backend=jax") == {"optimizer": {"backend": "jax"}}
+    with pytest.raises(ValueError):
+        parse_override("optimizer.backend=torch")
+    with pytest.raises(ValueError):
+        parse_override("optimizer.learning_rate=1")
+
+
+def test_context_targeted_override(store):
+    wl = "b2q512k512d64"
+    ov = parse_override(f"flash_attention@{wl}.block_q=256")
+    assert ov == {f"flash_attention@{wl}": {"block_q": 256}}
+    apply_overrides(ov)
+    s = attn_ops.attention_settings.settings_for(wl)
+    assert s["block_q"] == 256
+    # Other contexts and the global tier are untouched.
+    assert attn_ops.attention_settings.settings["block_q"] == 512
+    assert attn_ops.attention_settings.settings_for("other") is attn_ops.attention_settings.settings
+    # Overrides outrank stored entries for that context…
+    store.put(configstore.context_for("flash_attention", wl), {"block_q": 1024})
+    assert attn_ops.attention_settings.settings_for(wl)["block_q"] == 256
+    # …and current_settings reports the per-context state.
+    cur = current_settings()
+    assert cur[f"flash_attention@{wl}"]["block_q"] == 256
+    assert cur["flash_attention"] == attn_ops.attention_settings.settings
+    store.clear_override("flash_attention", wl)
+    assert attn_ops.attention_settings.settings_for(wl)["block_q"] == 1024
+
+
+# ------------------------------------------------------------ per-context dispatch
+def test_flash_attention_dispatches_per_context(store, monkeypatch):
+    import jax
+    import jax.numpy as jnp
+
+    calls = []
+    real_naive, real_scan = attn_ops.ref.naive_attention, attn_ops.ref.scan_attention
+    monkeypatch.setattr(attn_ops.ref, "naive_attention",
+                        lambda *a, **k: calls.append("naive") or real_naive(*a, **k))
+    monkeypatch.setattr(attn_ops.ref, "scan_attention",
+                        lambda *a, **k: calls.append("scan") or real_scan(*a, **k))
+
+    wl_small = attn_ops.workload_signature(1, 128, 128, 16)
+    wl_big = attn_ops.workload_signature(2, 256, 256, 16)
+    store.put(configstore.context_for("flash_attention", wl_small), {"impl": "naive"})
+    store.put(configstore.context_for("flash_attention", wl_big), {"impl": "scan"})
+
+    key = jax.random.PRNGKey(0)
+    for b, s in ((1, 128), (2, 256)):
+        q = jax.random.normal(key, (b, s, 2, 16), jnp.float32)
+        attn_ops.flash_attention(q, q, q)
+    assert calls == ["naive", "scan"]  # same op, two workloads, two tuned paths
+
+
+# ------------------------------------------------------------------- tracking run
+def test_run_context_manager_marks_failed_with_error(tmp_path):
+    tr = Tracker(root=str(tmp_path))
+    with pytest.raises(RuntimeError):
+        with tr.start_run("exp", "r1") as run:
+            run.log_metric("x", 1.0)
+            raise RuntimeError("boom")
+    assert run._metrics_f.closed  # no leaked handle
+    meta = json.loads((run.path / "meta.json").read_text())
+    assert meta["status"] == "FAILED"
+    assert "boom" in meta["error"]
+    run.end()  # idempotent: a later end() cannot overwrite the verdict
+    assert json.loads((run.path / "meta.json").read_text())["status"] == "FAILED"
