@@ -1,0 +1,96 @@
+"""Smoke assertions over the benchmark JSON outputs — one importable checker.
+
+These used to live as ``python - <<'PYEOF'`` heredocs inside ``test.sh``,
+which meant three copies of the truth (test.sh, the runner, CI) and zero
+tracebacks on failure.  Now ``test.sh --bench-smoke``, ``benchmarks.runner``
+and the CI workflow all call the same functions, and a failing assertion
+points at a real line.
+
+    PYTHONPATH=src python -m benchmarks.check_bench optimizer_throughput \
+        configstore_resolve --expect-quick
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+BENCH_DIR = Path("results/bench")
+
+
+def _load(name: str, expect_quick: Optional[bool]) -> Dict[str, Any]:
+    path = BENCH_DIR / f"{name}.json"
+    d = json.loads(path.read_text())
+    if expect_quick is not None:
+        assert d.get("quick") is expect_quick, (
+            f"{path}: quick={d.get('quick')!r}, expected {expect_quick}")
+    return d
+
+
+def check_optimizer_throughput(expect_quick: Optional[bool] = None) -> None:
+    d = _load("optimizer_throughput", expect_quick)
+    assert d["ask_latency_ms"], "no ask-latency points recorded"
+    for n, row in d["ask_latency_ms"].items():
+        assert row["numpy"] > 0 and row["jax"] > 0 and row["speedup"] > 0, (n, row)
+        assert len(row["numpy_samples"]) > 0 and len(row["jax_samples"]) > 0, (n, row)
+    assert d["batched"], "no batched points recorded"
+    for n, row in d["batched"].items():
+        assert row["sessions"] >= 2 and row["batched_ms"] > 0, (n, row)
+
+
+def check_configstore_resolve(expect_quick: Optional[bool] = None) -> None:
+    d = _load("configstore_resolve", expect_quick)
+    assert d["fresh_process_resolution"] == "ok"
+    wls = [c["workload"] for c in d["contexts"].values()]
+    assert len(wls) == 2 and len(set(wls)) == 2, wls
+    assert d["resolve"]["cached_ns_per_lookup"] > 0
+    assert d["resolve"]["uncached_first_ms"] > 0
+    assert len(d["resolve"]["cached_ns_samples"]) > 0
+    assert len(d["resolve"]["uncached_ms_samples"]) >= 2
+
+
+def check_kernel_autotune(expect_quick: Optional[bool] = None) -> None:
+    d = _load("kernel_autotune", expect_quick)
+    assert d["default_us"] > 0 and d["best_us"] > 0
+    assert d["best_us"] <= d["default_us"], "tuned config slower than default"
+    assert d["trace"], "no tuning trace recorded"
+    assert len(d["best_samples_us"]) > 0 and len(d["default_samples_us"]) > 0
+
+
+def check_multi_instance(expect_quick: Optional[bool] = None) -> None:
+    d = _load("multi_instance", expect_quick)
+    assert d["instances"], "no instances recorded"
+    for name, row in d["instances"].items():
+        assert row["no_worse"], (
+            f"{name}: multiplexed best {row['multiplexed_best']} worse than "
+            f"baseline {row['baseline_best']}")
+
+
+CHECKS = {
+    "optimizer_throughput": check_optimizer_throughput,
+    "configstore_resolve": check_configstore_resolve,
+    "kernel_autotune": check_kernel_autotune,
+    "multi_instance": check_multi_instance,
+}
+
+
+def run_checks(names, expect_quick: Optional[bool] = None) -> None:
+    for name in names:
+        CHECKS[name](expect_quick)
+        print(f"bench-smoke OK: {BENCH_DIR / name}.json")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("checks", nargs="+", choices=sorted(CHECKS))
+    ap.add_argument("--expect-quick", action="store_true",
+                    help="assert the JSON was produced by a --quick run")
+    args = ap.parse_args()
+    run_checks(args.checks, expect_quick=True if args.expect_quick else None)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,8 +12,6 @@ import json
 from pathlib import Path
 from typing import Any, Dict, List
 
-import numpy as np
-
 from repro.core.smartcomponents import TunableHashTable, hashtable_workload
 from repro.core.telemetry import os_counters
 

@@ -8,9 +8,10 @@ step time; here the XLA-CPU instance is the hardware being tuned for).
 """
 from __future__ import annotations
 
+import argparse
 import json
 from pathlib import Path
-from typing import Any, Dict
+from typing import Any, Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -18,37 +19,46 @@ import jax.numpy as jnp
 from repro.core.optimizers import make_optimizer
 from repro.core.tunable import Categorical, Int, TunableSpace
 from repro.kernels.flash_attention import ops as attn_ops
-from repro.launch.microbench import median_time_us
+from repro.launch.microbench import median_time_us, time_samples_us
 
 SHAPE = dict(b=2, s=1024, h=8, k=4, d=64)
+QUICK_SHAPE = dict(b=1, s=256, h=4, k=2, d=64)
 SPACE = TunableSpace([
     Categorical("impl", "scan", ("naive", "scan", "unrolled")),
     Int("block_q", 512, 128, 1024, log=True),
     Int("block_kv", 512, 128, 1024, log=True),
 ])
 BUDGET = 14
+SEED = 11
 
 
-def _measure(cfg: Dict[str, Any]) -> float:
-    b, s, h, k, d = SHAPE["b"], SHAPE["s"], SHAPE["h"], SHAPE["k"], SHAPE["d"]
+def _jit_op(cfg: Dict[str, Any], shape: Dict[str, int]):
+    b, s, h, k, d = shape["b"], shape["s"], shape["h"], shape["k"], shape["d"]
     key = jax.random.PRNGKey(0)
     q = jax.random.normal(key, (b, s, h, d), jnp.float32)
     kk = jax.random.normal(key, (b, s, k, d), jnp.float32)
     vv = jax.random.normal(key, (b, s, k, d), jnp.float32)
     fn = jax.jit(lambda q, kk, vv: attn_ops.flash_attention(
         q, kk, vv, impl=cfg["impl"], block_q=cfg["block_q"], block_kv=cfg["block_kv"]))
-    return median_time_us(fn, q, kk, vv)
+    return fn, (q, kk, vv)
 
 
-def run(budget: int = BUDGET) -> Dict[str, Any]:
-    base = _measure(SPACE.defaults())
-    res: Dict[str, Any] = {"default_us": base, "trace": []}
-    opt = make_optimizer("bo_matern32", SPACE, seed=11)
+def _measure(cfg: Dict[str, Any], shape: Dict[str, int]) -> float:
+    fn, args = _jit_op(cfg, shape)
+    return median_time_us(fn, *args)
+
+
+def run(budget: int = BUDGET, seed: int = SEED, quick: bool = False) -> Dict[str, Any]:
+    shape = QUICK_SHAPE if quick else SHAPE
+    base = _measure(SPACE.defaults(), shape)
+    res: Dict[str, Any] = {"default_us": base, "trace": [], "quick": quick,
+                           "seed": seed, "shape": dict(shape)}
+    opt = make_optimizer("bo_matern32", SPACE, seed=seed)
     best = base
     best_cfg = SPACE.defaults()
     for _ in range(budget):
         cfg = opt.ask()
-        t = _measure(cfg)
+        t = _measure(cfg, shape)
         opt.tell(cfg, t)
         if t < best:
             best, best_cfg = t, cfg
@@ -56,17 +66,48 @@ def run(budget: int = BUDGET) -> Dict[str, Any]:
     res["best_us"] = best
     res["best_config"] = best_cfg
     res["improvement_pct"] = 100.0 * (base - best) / base
+    # Sample-level re-measurement of the winner and the default: the tuning
+    # trace carries medians, but the baseline gate wants raw distributions.
+    fn, args = _jit_op(best_cfg, shape)
+    res["best_samples_us"] = time_samples_us(fn, *args, warmup=1, reps=5)
+    fn, args = _jit_op(SPACE.defaults(), shape)
+    res["default_samples_us"] = time_samples_us(fn, *args, warmup=1, reps=5)
     return res
 
 
-def main() -> Dict[str, Any]:
-    res = run()
+def _write(res: Dict[str, Any]) -> Dict[str, Any]:
     out = Path("results/bench"); out.mkdir(parents=True, exist_ok=True)
     (out / "kernel_autotune.json").write_text(json.dumps(res, indent=1))
     print("kernel autotune (attention op, instance-level):")
     print(f"  default={res['default_us']:.0f}us  best={res['best_us']:.0f}us "
           f"({res['improvement_pct']:.1f}% faster)  config={res['best_config']}")
     return res
+
+
+def bench(quick: bool = False, seed: int = SEED) -> List[Any]:
+    """Unified-runner protocol: run + convert to baseline BenchRecords."""
+    from repro.core.baseline import BenchRecord
+
+    res = _write(run(budget=5 if quick else BUDGET, seed=seed, quick=quick))
+    shape = res["shape"]
+    wl = attn_ops.workload_signature(shape["b"], shape["s"], shape["s"], shape["d"])
+    return [
+        BenchRecord.for_component(
+            "kernel_autotune", "tuned_us", res["best_samples_us"],
+            "flash_attention", wl, unit="us", config=res["best_config"]),
+        BenchRecord.for_component(
+            "kernel_autotune", "default_us", res["default_samples_us"],
+            "flash_attention", wl, unit="us"),
+    ]
+
+
+def main() -> Dict[str, Any]:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="small shape + budget")
+    ap.add_argument("--seed", type=int, default=SEED)
+    args = ap.parse_args()
+    return _write(run(budget=5 if args.quick else BUDGET, seed=args.seed,
+                      quick=args.quick))
 
 
 if __name__ == "__main__":

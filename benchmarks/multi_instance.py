@@ -23,7 +23,8 @@ import time
 from pathlib import Path
 from typing import Any, Dict
 
-from repro.core import AgentClient, AgentProcess, MlosChannel, TrackedInstance, TuningSession, drive_session, pack_telemetry
+from repro.core import (AgentClient, AgentProcess, MlosChannel, TrackedInstance,
+                        TuningSession, drive_session, pack_telemetry)
 from repro.core.registry import get_component
 from repro.core.smartcomponents import TunableHashTable, hashtable_workload
 
@@ -42,22 +43,22 @@ def _measure(table: TunableHashTable, iid: int) -> Dict[str, float]:
     return hashtable_workload(table, **wl)
 
 
-def _sessions():
+def _sessions(budget: int = BUDGET, seed: int = 100):
     meta = get_component("hashtable")
     return [
         TuningSession.for_component(
             meta, objective="collisions", optimizer=OPTIMIZER,
-            budget=BUDGET, seed=100 + iid, instance_id=iid,
+            budget=budget, seed=seed + iid, instance_id=iid,
         )
         for iid in INSTANCES
     ]
 
 
-def run_baseline() -> Dict[int, float]:
+def run_baseline(budget: int = BUDGET, seed: int = 100) -> Dict[int, float]:
     """One agent run per instance, sequentially (in-process deterministic twin
     of spawning N daemons — same cores, same seeds, no channel overhead)."""
     best: Dict[int, float] = {}
-    for s in _sessions():
+    for s in _sessions(budget, seed):
         table = TunableHashTable()
 
         def measure(settings: Dict[str, Any], table=table, iid=s.instance_id) -> Dict[str, float]:
@@ -68,12 +69,12 @@ def run_baseline() -> Dict[int, float]:
     return best
 
 
-def run_multiplexed() -> Dict[int, Dict[str, Any]]:
+def run_multiplexed(budget: int = BUDGET, seed: int = 100) -> Dict[int, Dict[str, Any]]:
     """All instances behind one AgentProcess + one MlosChannel."""
     meta = get_component("hashtable")
     chan = MlosChannel.create(capacity=1 << 16)
     try:
-        agent = AgentProcess(chan, _sessions()).start()
+        agent = AgentProcess(chan, _sessions(budget, seed)).start()
         client = AgentClient(chan)
         tracked = {iid: TrackedInstance(TunableHashTable()) for iid in INSTANCES}
         for iid, t in tracked.items():
@@ -94,23 +95,27 @@ def run_multiplexed() -> Dict[int, Dict[str, Any]]:
         chan.close()
 
 
-def main() -> Dict[str, Any]:
+def run(budget: int = BUDGET, seed: int = 100, quick: bool = False) -> Dict[str, Any]:
+    if quick:
+        budget = min(budget, 6)
     t0 = time.time()
-    baseline = run_baseline()
+    baseline = run_baseline(budget, seed)
     t_base = time.time() - t0
     t0 = time.time()
-    mux = run_multiplexed()
+    mux = run_multiplexed(budget, seed)
     t_mux = time.time() - t0
 
     res: Dict[str, Any] = {
-        "budget": BUDGET,
+        "budget": budget,
         "optimizer": OPTIMIZER,
+        "quick": quick,
+        "seed": seed,
         "baseline_wall_s": t_base,
         "multiplexed_wall_s": t_mux,
         "instances": {},
     }
     print(f"multi-instance tuning: {len(INSTANCES)} hash-table instances, "
-          f"budget {BUDGET}/instance, one agent daemon vs {len(INSTANCES)}")
+          f"budget {budget}/instance, one agent daemon vs {len(INSTANCES)}")
     print(f"  wall: in-process baseline={t_base:.1f}s (no daemon/channel — a floor)  "
           f"multiplexed daemon={t_mux:.1f}s (incl. ~1s spawn)")
     for iid, wl in INSTANCES.items():
@@ -129,6 +134,33 @@ def main() -> Dict[str, Any]:
     out.mkdir(parents=True, exist_ok=True)
     (out / "multi_instance.json").write_text(json.dumps(res, indent=1))
     return res
+
+
+def bench(quick: bool = False, seed: int = 100) -> list:
+    """Unified-runner protocol: run + convert to baseline BenchRecords.
+
+    The multiplexed wall clock is re-measured once more so the record
+    carries two samples, not one — a singleton candidate can never reach
+    significance, and the gate (correctly) refuses to fail on it
+    (``insufficient_data``).  The tuning quality invariant (multiplexed no
+    worse than baseline) rides in meta and is asserted by check_bench.
+    """
+    from repro.core.baseline import BenchRecord
+
+    res = run(seed=seed, quick=quick)
+    t0 = time.time()
+    run_multiplexed(res["budget"], seed)
+    wall2 = time.time() - t0
+    no_worse = sum(1 for v in res["instances"].values() if v["no_worse"])
+    return [BenchRecord.for_component(
+        "multi_instance", "multiplexed_wall_s",
+        [res["multiplexed_wall_s"], wall2],
+        "agent", f"hashtable_x{len(res['instances'])}b{res['budget']}",
+        unit="s", no_worse=no_worse, instances=len(res["instances"]))]
+
+
+def main() -> Dict[str, Any]:
+    return run()
 
 
 if __name__ == "__main__":

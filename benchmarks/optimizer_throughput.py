@@ -69,26 +69,26 @@ def _time_asks(opt: BayesOpt, repeats: int, warmup: int = 1) -> List[float]:
     return out
 
 
-def main() -> Dict[str, Any]:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--quick", action="store_true",
-                    help="seconds-scale subset with the same JSON schema")
-    args = ap.parse_args()
-
+def run(quick: bool = False, seed: int = 7) -> Dict[str, Any]:
+    """Measure; all randomness derives from ``seed`` so a ``--quick`` rerun
+    replays the identical ask/tell sequence (CI gate reproducibility)."""
     import jax  # after XLA_FLAGS
 
-    ns = [25] if args.quick else [25, 100, 200]
-    np_reps = 2 if args.quick else 4
-    jx_reps = 5 if args.quick else 20
+    ns = [25] if quick else [25, 100, 200]
+    # 5 reps even in quick mode: the bench gate's permutation test needs
+    # enough samples per side to be able to reach significance at all.
+    np_reps = 5 if quick else 4
+    jx_reps = 5 if quick else 20
     n_sessions = 8
     # Headline batched point sits in the regime tuning sessions actually live
     # in (budget ~50 ⇒ most asks at n<64); large-n is reported as context —
     # there the posterior solves are compute-bound and batching amortizes
     # only dispatch, not FLOPs.
-    sess_hists = [16] if args.quick else [25, 100]
+    sess_hists = [16] if quick else [25, 100]
 
     res: Dict[str, Any] = {
-        "quick": bool(args.quick),
+        "quick": bool(quick),
+        "seed": int(seed),
         "d": len(SPACE),
         "n_candidates": 1280,
         "host_devices": len(jax.devices()),
@@ -99,41 +99,44 @@ def main() -> Dict[str, Any]:
     print(f"BO ask latency, d={len(SPACE)}, pool=1280 candidates "
           f"({len(jax.devices())} XLA host devices)")
     for n in ns:
-        t_np = _time_asks(_with_history("numpy", seed=7, n=n), np_reps)
-        t_jx = _time_asks(_with_history("jax", seed=7, n=n), jx_reps, warmup=2)
+        t_np = _time_asks(_with_history("numpy", seed=seed, n=n), np_reps)
+        t_jx = _time_asks(_with_history("jax", seed=seed, n=n), jx_reps, warmup=2)
         mn, mj = statistics.median(t_np), statistics.median(t_jx)
         res["ask_latency_ms"][str(n)] = {
             "numpy": mn, "jax": mj, "speedup": mn / mj,
             "numpy_mean": statistics.fmean(t_np), "jax_mean": statistics.fmean(t_jx),
+            "numpy_samples": t_np, "jax_samples": t_jx,
         }
         print(f"  n={n:4d}  numpy={mn:9.2f} ms   jax={mj:7.2f} ms   "
               f"speedup={mn / mj:6.1f}x")
 
     # -- mux-wide batched ask: 8 sessions, one dispatch --------------------
-    def _median(fn, reps):
+    def _samples(fn, reps):
         ts = []
         for _ in range(reps):
             t0 = time.perf_counter()
             fn()
             ts.append((time.perf_counter() - t0) * 1e3)
-        return statistics.median(ts)
+        return ts
 
-    reps = 3 if args.quick else 10
+    reps = 3 if quick else 10
     for sess_hist in sess_hists:
-        seq_opts = [_with_history("jax", seed=s, n=sess_hist)
+        seq_opts = [_with_history("jax", seed=seed + s, n=sess_hist)
                     for s in range(n_sessions)]
-        bat_opts = [_with_history("jax", seed=s, n=sess_hist)
+        bat_opts = [_with_history("jax", seed=seed + s, n=sess_hist)
                     for s in range(n_sessions)]
         for o in seq_opts:  # compile + hyper-refit warmup
             o.ask()
         batched = BatchedBayesOpt(bat_opts)
         batched.ask_all()
-        t_seq = _median(lambda: [o.ask() for o in seq_opts], reps)
-        t_bat = _median(batched.ask_all, reps)
+        s_seq = _samples(lambda: [o.ask() for o in seq_opts], reps)
+        s_bat = _samples(batched.ask_all, reps)
+        t_seq, t_bat = statistics.median(s_seq), statistics.median(s_bat)
         res["batched"][str(sess_hist)] = {
             "sessions": n_sessions, "history": sess_hist,
             "sequential_ms": t_seq, "batched_ms": t_bat,
             "speedup": t_seq / t_bat,
+            "sequential_samples": s_seq, "batched_samples": s_bat,
         }
         print(f"  {n_sessions} sessions (n={sess_hist}): sequential={t_seq:7.2f} ms"
               f"   batched={t_bat:7.2f} ms   speedup={t_seq / t_bat:5.1f}x")
@@ -143,6 +146,37 @@ def main() -> Dict[str, Any]:
     (out / "optimizer_throughput.json").write_text(json.dumps(res, indent=1))
     print(f"wrote {out / 'optimizer_throughput.json'}")
     return res
+
+
+def bench(quick: bool = False, seed: int = 7) -> List[Any]:
+    """Unified-runner protocol: run + convert to baseline BenchRecords."""
+    from repro.core.baseline import BenchRecord
+
+    res = run(quick=quick, seed=seed)
+    wl = f"d{res['d']}"
+    records = []
+    for n, row in res["ask_latency_ms"].items():
+        for backend in ("numpy", "jax"):
+            records.append(BenchRecord.for_component(
+                "optimizer_throughput", f"ask_ms/{backend}/n{n}",
+                row[f"{backend}_samples"], "optimizer", f"{wl}n{n}",
+                unit="ms", speedup=row["speedup"]))
+    for h, row in res["batched"].items():
+        records.append(BenchRecord.for_component(
+            "optimizer_throughput", f"batched_ms/s{row['sessions']}h{h}",
+            row["batched_samples"], "optimizer", f"{wl}s{row['sessions']}h{h}",
+            unit="ms", speedup=row["speedup"]))
+    return records
+
+
+def main() -> Dict[str, Any]:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="seconds-scale subset with the same JSON schema")
+    ap.add_argument("--seed", type=int, default=7,
+                    help="base seed for history generation (reproducible runs)")
+    args = ap.parse_args()
+    return run(quick=args.quick, seed=args.seed)
 
 
 if __name__ == "__main__":

@@ -8,7 +8,6 @@ loop as the "system".
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import jax
 
 from repro.configs import get_config
 from repro.core import AgentCore, TuningSession

@@ -19,7 +19,7 @@ version-string compared, so unreleased intermediates also work.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Sequence
 
 import jax
 from jax.sharding import AbstractMesh, Mesh

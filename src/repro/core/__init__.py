@@ -8,17 +8,22 @@ Layers (paper §2.1):
   telemetry         — app metrics + OS (/proc) + compiled-HLO "HW" counters
   tracking          — MLflow-like experiment store
   configstore       — persistent, context-keyed store of tuned configurations
+  stats             — noise-aware measurement + three-way A/B comparator
+  baseline          — append-only perf trajectory + regression-gate baselines
   rpi               — Resource Performance Interfaces (perf-regression gates)
   optimizers        — RandomSearch / Grid / One-at-a-time / GP-BO (Matern-3/2)
   smartcomponents   — paper-faithful demo components (hashtable, spinlock)
 """
 from .agent import (AgentClient, AgentCore, AgentMux, AgentProcess, TrackedInstance,
                     TuningSession, drive_session, promote_session_report)
+from .baseline import BaselineStore, BenchRecord, GateReport
 from .channel import MlosChannel, ShmRing
 from .codegen import generate_source, load_generated, pack_telemetry, unpack_telemetry
 from .configstore import ConfigStore, Context, context_for, default_store, resolve_settings
 from .registry import MetricSpec, all_components, get_component, tunable_component
 from .rpi import RPI, Bound, RpiReport, assert_rpi
+from .stats import (Comparison, Measurement, bootstrap_ci, compare,
+                    measure_adaptive, measure_interleaved)
 from .telemetry import Stopwatch, TelemetryEmitter, collective_bytes, hlo_counters, os_counters
 from .tracking import Tracker
 from .tunable import Bool, Categorical, Float, Int, Tunable, TunableSpace
@@ -29,6 +34,9 @@ __all__ = [
     "MlosChannel", "ShmRing",
     "generate_source", "load_generated", "pack_telemetry", "unpack_telemetry",
     "ConfigStore", "Context", "context_for", "default_store", "resolve_settings",
+    "BaselineStore", "BenchRecord", "GateReport",
+    "Comparison", "Measurement", "bootstrap_ci", "compare",
+    "measure_adaptive", "measure_interleaved",
     "MetricSpec", "all_components", "get_component", "tunable_component",
     "RPI", "Bound", "RpiReport", "assert_rpi",
     "Stopwatch", "TelemetryEmitter", "collective_bytes", "hlo_counters", "os_counters",

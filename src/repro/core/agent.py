@@ -47,7 +47,7 @@ from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
 from .channel import MlosChannel
 from .optimizers import make_optimizer, optimizer_defaults, set_optimizer_defaults
-from .registry import ComponentMeta, MetricSpec
+from .registry import ComponentMeta
 from .tunable import TunableSpace
 
 __all__ = ["TuningSession", "AgentCore", "AgentMux", "AgentProcess", "AgentClient",

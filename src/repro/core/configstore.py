@@ -227,16 +227,46 @@ class ConfigStore:
 
     def promote(self, context: Context, settings: Dict[str, Any], *,
                 rpi: Any = None, metrics: Optional[Dict[str, float]] = None,
+                baseline: Optional[List[float]] = None,
+                samples: Optional[List[float]] = None,
+                mode: str = "min", tolerance: float = 0.05, alpha: float = 0.05,
                 provenance: Optional[Dict[str, Any]] = None) -> bool:
-        """Validated write: the config enters the store only if it passes its
-        RPI envelope (the paper's tune → VALIDATE → persist loop).  Returns
-        True on promotion; on rejection the store is left untouched and
-        False is returned for the caller to record."""
+        """Validated write: the config enters the store only if it passes the
+        gates (the paper's tune → VALIDATE → persist loop).  Two gates, both
+        optional and composable:
+
+          * ``rpi`` + ``metrics`` — static envelope check (absolute bounds);
+          * ``baseline`` + ``samples`` — the noise-aware A/B comparator
+            (:func:`repro.core.stats.compare`): rejected only when the new
+            config's samples are a *statistically significant* regression
+            beyond ``tolerance`` versus the baseline distribution — a raw
+            threshold can be tripped by jitter, the comparator cannot.
+            Samples too few for the test to reach ``alpha`` (a singleton
+            measurement) never reject — pass real distributions to gate.
+
+        Returns True on promotion; on rejection the store is left untouched
+        and False is returned for the caller to record.  The comparator
+        verdict is recorded in provenance either way a write happens.
+        """
         if rpi is not None:
             report = rpi.check(metrics or {})
             if not report:
                 return False
-        self.put(context, settings, provenance)
+        prov = dict(provenance or {})
+        if baseline is not None and samples is not None:
+            from . import stats  # local: stats imports nothing from here
+
+            cmp = stats.compare(baseline, samples, alpha=alpha,
+                                min_effect=tolerance, mode=mode)
+            verdict = cmp.verdict
+            if verdict != "noise" and cmp.p_value is None:
+                verdict = "insufficient_data"  # evidence-free shift: no veto
+            elif verdict == "regressed":
+                return False
+            prov.setdefault("gate", {"verdict": verdict,
+                                     "effect": cmp.effect,
+                                     "p_value": cmp.p_value})
+        self.put(context, settings, prov)
         return True
 
     # -- read paths -----------------------------------------------------------

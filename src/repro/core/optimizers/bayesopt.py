@@ -17,7 +17,7 @@ equivalent — a tested contract (``tests/test_optimizer_engine.py``).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import numpy as np
 from scipy.stats import norm

@@ -11,9 +11,11 @@ from __future__ import annotations
 
 import json
 import math
-from dataclasses import dataclass, field, asdict
+from dataclasses import asdict, dataclass, field
 from pathlib import Path
-from typing import Any, Dict, Iterable, List, Optional, Tuple
+from typing import Any, Dict, Iterable, List, Sequence, Tuple
+
+import numpy as np
 
 from .tracking import Tracker
 
@@ -73,7 +75,37 @@ class RPI:
         raw = json.loads(p.read_text())
         return RPI(raw["component"], raw["workload"], tuple(Bound(**b) for b in raw["bounds"]))
 
-    # -- learning envelopes from tracked runs ("learned from build-test runs")
+    # -- learning envelopes from measured distributions ----------------------
+    @staticmethod
+    def from_samples(
+        component: str,
+        workload: str,
+        metric_samples: Dict[str, Sequence[float]],
+        *,
+        q_low: float = 0.05,
+        q_high: float = 0.95,
+        slack: float = 0.25,
+    ) -> "RPI":
+        """Derive bounds from measured distributions: ``[q_low - slack·span,
+        q_high + slack·span]`` per metric.
+
+        Quantiles + margin, NOT observed min/max: a single outlier sample
+        (one GC pause in the history) must widen the envelope by its tail
+        *probability*, not by its raw magnitude.  This is the one bound
+        constructor — ``learn`` (tracked runs) and baseline-store derivation
+        both funnel through it.
+        """
+        bounds = []
+        for m, vals in metric_samples.items():
+            a = np.asarray(list(vals), dtype=float)
+            if a.size == 0:
+                continue
+            lo = float(np.quantile(a, q_low))
+            hi = float(np.quantile(a, q_high))
+            span = max(abs(lo), abs(hi), 1e-12)
+            bounds.append(Bound(m, lo - slack * span, hi + slack * span))
+        return RPI(component, workload, tuple(bounds))
+
     @staticmethod
     def learn(
         component: str,
@@ -82,26 +114,42 @@ class RPI:
         experiment: str,
         metrics: Iterable[str],
         slack: float = 0.25,
+        q_low: float = 0.05,
+        q_high: float = 0.95,
     ) -> "RPI":
-        """Derive bounds from historical runs: [min·(1-slack), max·(1+slack)]."""
-        lows: Dict[str, float] = {}
-        highs: Dict[str, float] = {}
+        """Learn an envelope from tracked runs' metric history
+        (distribution quantiles + margin via :meth:`from_samples`)."""
+        samples: Dict[str, List[float]] = {}
         for rec in tracker.runs(experiment):
             for m in metrics:
                 hist = rec.metrics.get(m)
-                if not hist:
-                    continue
-                vals = [h["value"] for h in hist]
-                lows[m] = min(lows.get(m, math.inf), min(vals))
-                highs[m] = max(highs.get(m, -math.inf), max(vals))
-        bounds = []
-        for m in metrics:
-            if m not in lows:
-                continue
-            lo, hi = lows[m], highs[m]
-            span = max(abs(lo), abs(hi), 1e-12)
-            bounds.append(Bound(m, lo - slack * span, hi + slack * span))
-        return RPI(component, workload, tuple(bounds))
+                if hist:
+                    samples.setdefault(m, []).extend(h["value"] for h in hist)
+        return RPI.from_samples(component, workload, samples,
+                                q_low=q_low, q_high=q_high, slack=slack)
+
+    @staticmethod
+    def from_baseline(
+        component: str,
+        workload: str,
+        store: Any,
+        records: Iterable[Any],
+        *,
+        window: int = 5,
+        q_low: float = 0.05,
+        q_high: float = 0.95,
+        slack: float = 0.25,
+    ) -> "RPI":
+        """Envelope from a :class:`repro.core.baseline.BaselineStore`'s stored
+        distributions — one bound per record coordinate, metric-named by the
+        record's ``metric`` field."""
+        samples = {}
+        for rec in records:
+            vals = store.baseline_values(rec, window=window)
+            if vals:
+                samples[rec.metric] = vals
+        return RPI.from_samples(component, workload, samples,
+                                q_low=q_low, q_high=q_high, slack=slack)
 
 
 def assert_rpi(rpi: RPI, metrics: Dict[str, float]) -> None:

@@ -21,12 +21,12 @@ from __future__ import annotations
 
 import heapq
 import time
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import numpy as np
 
 from .registry import MetricSpec, tunable_component
-from .tunable import Categorical, Float, Int
+from .tunable import Categorical, Int
 
 __all__ = ["TunableHashTable", "SpinLock", "hashtable_workload", "spinlock_workload"]
 

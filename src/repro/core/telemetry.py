@@ -166,7 +166,8 @@ def hlo_counters(compiled: Any, lowered_text: Optional[str] = None) -> Dict[str,
         pass
     try:
         ma = compiled.memory_analysis()
-        for k in ("argument_size_in_bytes", "output_size_in_bytes", "temp_size_in_bytes", "generated_code_size_in_bytes", "alias_size_in_bytes"):
+        for k in ("argument_size_in_bytes", "output_size_in_bytes", "temp_size_in_bytes",
+                  "generated_code_size_in_bytes", "alias_size_in_bytes"):
             v = getattr(ma, k, None)
             if v is not None:
                 out[k] = float(v)

@@ -8,7 +8,6 @@ paper's "versioning and tracking of all models/experiments".
 from __future__ import annotations
 
 import json
-import os
 import time
 import uuid
 from dataclasses import dataclass, field
@@ -137,7 +136,11 @@ class Tracker:
     def best_run(self, experiment: str, metric: str, mode: str = "min") -> Optional[RunRecord]:
         best, best_v = None, None
         for rec in self.runs(experiment):
-            v = rec.min(metric) if mode == "min" else (max(h["value"] for h in rec.metrics.get(metric, [])) if rec.metrics.get(metric) else None)
+            if mode == "min":
+                v = rec.min(metric)
+            else:
+                hist = rec.metrics.get(metric)
+                v = max(h["value"] for h in hist) if hist else None
             if v is None:
                 continue
             if best_v is None or (v < best_v if mode == "min" else v > best_v):

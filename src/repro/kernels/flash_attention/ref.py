@@ -18,7 +18,6 @@ and return (B, Sq, H, D).  ``q_offset`` positions q tokens at
 """
 from __future__ import annotations
 
-import functools
 import math
 from typing import Optional
 

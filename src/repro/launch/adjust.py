@@ -22,7 +22,7 @@ are NOT adjusted (the SP boundary gathers are real on TPU too).
 from __future__ import annotations
 
 import math
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -75,7 +75,8 @@ def attention_adjustment(cfg: ModelConfig, shape: Shape, mesh: Mesh,
             P(s, logical), rules, mesh))
 
     q = struct((b, sq, cfg.n_heads, cfg.hd), ("batch", None, "heads", None))
-    k = struct((b, skv, cfg.n_kv_heads, cfg.hd), ("batch", "cache_seq" if shape.kind == "decode" else None, "kv_heads", None))
+    k = struct((b, skv, cfg.n_kv_heads, cfg.hd),
+               ("batch", "cache_seq" if shape.kind == "decode" else None, "kv_heads", None))
     v = k
 
     train = shape.kind == "train"

@@ -9,22 +9,31 @@ warmup call absorbs jit compilation.
 from __future__ import annotations
 
 import time
-from typing import Any, Callable
+from typing import Any, Callable, List
 
 import jax
 import numpy as np
 
-__all__ = ["median_time_us"]
+__all__ = ["median_time_us", "time_samples_us"]
 
 
-def median_time_us(fn: Callable[..., Any], *args: Any, warmup: int = 1,
-                   reps: int = 3) -> float:
-    """Median wall-clock microseconds of ``fn(*args)`` (device-synchronized)."""
+def time_samples_us(fn: Callable[..., Any], *args: Any, warmup: int = 1,
+                    reps: int = 3) -> List[float]:
+    """Raw wall-clock microseconds per call of ``fn(*args)`` (device-
+    synchronized), warmup discarded — the sample-level feed for
+    ``core.stats`` / the baseline gate, which need distributions, not
+    pre-aggregated medians."""
     for _ in range(max(warmup, 0)):
         jax.block_until_ready(fn(*args))
     times = []
     for _ in range(max(reps, 1)):
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
-        times.append(time.perf_counter() - t0)
-    return float(np.median(times) * 1e6)
+        times.append((time.perf_counter() - t0) * 1e6)
+    return times
+
+
+def median_time_us(fn: Callable[..., Any], *args: Any, warmup: int = 1,
+                   reps: int = 3) -> float:
+    """Median wall-clock microseconds of ``fn(*args)`` (device-synchronized)."""
+    return float(np.median(time_samples_us(fn, *args, warmup=warmup, reps=reps)))

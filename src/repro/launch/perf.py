@@ -2,9 +2,11 @@
 
 For a chosen cell this runs a scripted sequence of MLOS-tunable overrides
 (each with an explicit hypothesis + napkin prediction recorded BEFORE the
-measurement), compares the roofline terms against the running best, keeps
-what wins, and stops after `patience` consecutive <5% improvements on the
-dominant term.  Each experiment is a fresh subprocess of launch.dryrun (so
+measurement), compares the step bound against the running best through the
+``core.stats`` A/B comparator (verdict ``improved | regressed | noise``
+instead of a raw threshold), keeps what wins, and stops after `patience`
+consecutive non-``improved`` verdicts.  Each experiment is a fresh
+subprocess of launch.dryrun (so
 XLA state never leaks between configs) writing a tagged result file; this
 driver only orchestrates and summarizes.
 
@@ -20,8 +22,13 @@ import sys
 from pathlib import Path
 from typing import Any, Dict, List, Optional
 
-from ..core import configstore
+from ..core import configstore, stats
 from .tuning import parse_override, split_target
+
+# A candidate must cut the step bound by at least this relative margin for
+# the comparator to call it "improved" (anything smaller is modeling noise —
+# the analytic roofline carries single-digit-% error by construction).
+REL_TOL = 0.05
 
 # Candidate moves.  `predict` is the napkin estimate (recorded verbatim in the
 # log, then marked confirmed/refuted against the measurement).
@@ -171,24 +178,35 @@ def hillclimb(arch: str, shape: str, mesh: str = "single", out: str = "results/d
             after_terms = _terms(rec)
             after = after_terms[best["bottleneck"]]
             gain = (before - after) / before if before else 0.0
+            # Keep/revert routes through the core.stats comparator: analytic
+            # roofline estimates are singleton samples, so the verdict is the
+            # effect-size-only degradation of the same three-way contract the
+            # measured gates use (swap in distributions and nothing changes).
+            cmp = stats.compare([max(_terms(best).values())],
+                                [max(after_terms.values())],
+                                min_effect=REL_TOL, mode="min")
             entry.update({"terms": after_terms, "dominant": rec["bottleneck"],
                           "per_device_bytes": rec["per_device_bytes"],
                           "roofline_fraction": rec.get("roofline_fraction"),
                           "gain_on_prev_dominant": gain,
+                          "verdict": cmp.verdict,
+                          "effect_on_step_bound": cmp.effect,
                           "fits_16gb": rec["fits_16gb"]})
             # memory gate uses the TPU-native estimate (the CPU-measured
             # number is f32-inflated — DESIGN.md §5b.6)
             mem_est = rec.get("tpu_memory_estimate_bytes", rec["per_device_bytes"])
-            better = (max(after_terms.values()) < max(_terms(best).values())
-                      and mem_est < 16e9)
-            entry["outcome"] = (f"confirmed: dominant {best['bottleneck']} "
+            # Keep any strict win that fits memory; only a confident
+            # ("improved", i.e. beyond REL_TOL) win resets patience.
+            better = cmp.effect < 0 and mem_est < 16e9
+            entry["outcome"] = (f"confirmed[{cmp.verdict}]: dominant {best['bottleneck']} "
                                 f"{before*1e3:.1f}→{after*1e3:.1f} ms ({gain:+.1%})"
                                 if better else
-                                f"refuted/kept-out: step bound "
-                                f"{max(_terms(best).values())*1e3:.1f}→{max(after_terms.values())*1e3:.1f} ms")
+                                f"refuted/kept-out[{cmp.verdict}]: step bound "
+                                f"{max(_terms(best).values())*1e3:.1f}→"
+                                f"{max(after_terms.values())*1e3:.1f} ms")
             if better:
                 best, best_sets, best_mb = rec, sets, mb
-                stall = 0 if gain >= 0.05 else stall + 1
+                stall = 0 if cmp.verdict == "improved" else stall + 1
             else:
                 stall += 1
         print(f"    {entry['outcome']}")

@@ -2,9 +2,9 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
-from ..configs import ALL_ARCHS, get_config
+from ..configs import ALL_ARCHS
 from ..models.config import ModelConfig
 
 __all__ = ["SHAPES", "Shape", "cell_status", "all_cells"]

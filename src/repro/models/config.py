@@ -8,7 +8,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional, Tuple
 
 __all__ = ["ModelConfig"]
 
@@ -103,7 +102,9 @@ class ModelConfig:
         import jax
 
         specs = model.param_specs(self)
-        return sum(int(math.prod(p.shape)) for p in jax.tree.leaves(specs, is_leaf=lambda x: hasattr(x, "shape") and hasattr(x, "logical")))
+        leaves = jax.tree.leaves(
+            specs, is_leaf=lambda x: hasattr(x, "shape") and hasattr(x, "logical"))
+        return sum(int(math.prod(p.shape)) for p in leaves)
 
     def active_param_count(self) -> int:
         """Parameters touched per token (MoE: top-k experts only)."""

@@ -10,7 +10,6 @@ Public entry points (all pure functions over parameter pytrees):
 """
 from __future__ import annotations
 
-import math
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -147,7 +146,8 @@ def _chunked_ce(h: jax.Array, w: jax.Array, labels: jax.Array, cfg: ModelConfig)
     return nll / jnp.maximum(cnt, 1.0)
 
 
-def loss_fn(params: Dict[str, Any], cfg: ModelConfig, batch: Dict[str, jax.Array]) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+def loss_fn(params: Dict[str, Any], cfg: ModelConfig,
+            batch: Dict[str, jax.Array]) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """batch: tokens (B,S) int32, labels (B,S) int32 (-1 = pad), optional modal."""
     h, aux = forward(params, cfg, batch["tokens"], batch.get("modal"))
     ce = _chunked_ce(h, _out_weight(params, cfg), batch["labels"], cfg)

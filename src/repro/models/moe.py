@@ -132,7 +132,6 @@ def _moe_shard_map(params, x: jax.Array, cfg: ModelConfig, cf: float,
     """shard_map MoE: residual stays (batch×seq)-sharded; expert weights come
     in ff-sharded over `model` (all-gathered over the FSDP axes at the
     boundary, once, in compute dtype); dispatch is local per device."""
-    from ..parallel import sharding as shd
     from jax.sharding import PartitionSpec as PSpec
 
     names = set(mesh.axis_names)

@@ -11,7 +11,6 @@ the pod axis, but the collective moves int8.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Tuple
 
 import jax

@@ -10,12 +10,11 @@ migration protocol needed, the filesystem is the exchange medium).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 from jax.sharding import Mesh
 
-from ..models.config import ModelConfig
 from ..parallel import sharding as shd
 
 __all__ = ["replan_mesh", "reshard_state", "usable_factorization"]

@@ -8,8 +8,7 @@ MLOS auto-parameters (class-b: changing them re-jits).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp

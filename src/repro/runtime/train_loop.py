@@ -10,10 +10,9 @@ deterministic data stream (PackedBatcher.batch_at is stateless).
 from __future__ import annotations
 
 import time
-from typing import Any, Callable, Dict, Iterable, Optional
+from typing import Any, Callable, Dict, Optional
 
 import jax
-import numpy as np
 
 from ..core.tracking import Tracker
 from ..data.pipeline import PackedBatcher, SyntheticCorpus

@@ -9,11 +9,22 @@
 #     XLA_FLAGS is respected.
 #
 # Usage: bash test.sh [pytest args...]   e.g. bash test.sh tests/test_sharding.py -k moe
+#        bash test.sh --fast             tier-1 minus the slow spawn-subprocess
+#                                        tests (pytest -m "not slow") — the CI
+#                                        quick lane
 #        bash test.sh --bench-smoke      quick perf-harness sanity: runs
 #                                        benchmarks/optimizer_throughput.py --quick
 #                                        and benchmarks/configstore_roundtrip.py --quick
-#                                        and asserts both wrote valid JSON, so the
+#                                        and asserts both wrote valid JSON
+#                                        (benchmarks/check_bench.py), so the
 #                                        tracked perf trajectory can't rot silently.
+#        bash test.sh --bench-gate       continuous-benchmarking gate: runs ALL
+#                                        registered benchmarks (benchmarks/runner.py
+#                                        --quick), appends one context-keyed record
+#                                        per metric to results/bench/trajectory.jsonl,
+#                                        and FAILS on a statistically significant
+#                                        regression vs the stored baseline
+#                                        (noise-level jitter passes).
 set -euo pipefail
 cd "$(dirname "$0")"
 export PYTHONPATH="$PWD/src${PYTHONPATH:+:$PYTHONPATH}"
@@ -22,33 +33,23 @@ export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=8}"
 if [[ "${1:-}" == "--bench-smoke" ]]; then
   shift
   python benchmarks/optimizer_throughput.py --quick "$@"
-  python - <<'PYEOF'
-import json
-d = json.load(open("results/bench/optimizer_throughput.json"))
-assert d["quick"] is True
-assert d["ask_latency_ms"], "no ask-latency points recorded"
-for n, row in d["ask_latency_ms"].items():
-    assert row["numpy"] > 0 and row["jax"] > 0 and row["speedup"] > 0, (n, row)
-assert d["batched"], "no batched points recorded"
-for n, row in d["batched"].items():
-    assert row["sessions"] >= 2 and row["batched_ms"] > 0, (n, row)
-print("bench-smoke OK:", "results/bench/optimizer_throughput.json")
-PYEOF
+  python -m benchmarks.check_bench optimizer_throughput --expect-quick
   # Configstore round-trip: two flash_attention contexts tuned in one run,
   # distinct bests persisted, a fresh process resolves each, lookup cost recorded.
   python benchmarks/configstore_roundtrip.py --quick
-  python - <<'PYEOF'
-import json
-d = json.load(open("results/bench/configstore_resolve.json"))
-assert d["quick"] is True
-assert d["fresh_process_resolution"] == "ok"
-wls = [c["workload"] for c in d["contexts"].values()]
-assert len(wls) == 2 and len(set(wls)) == 2, wls
-assert d["resolve"]["cached_ns_per_lookup"] > 0
-assert d["resolve"]["uncached_first_ms"] > 0
-print("bench-smoke OK:", "results/bench/configstore_resolve.json")
-PYEOF
+  python -m benchmarks.check_bench configstore_resolve --expect-quick
   exit 0
+fi
+
+if [[ "${1:-}" == "--bench-gate" ]]; then
+  shift
+  python -m benchmarks.runner --quick --gate "$@"
+  exit 0
+fi
+
+if [[ "${1:-}" == "--fast" ]]; then
+  shift
+  exec python -m pytest -q -m "not slow" "$@"
 fi
 
 exec python -m pytest -q "$@"

@@ -10,7 +10,7 @@ import multiprocessing
 
 import pytest
 
-from repro.core import TuningSession, Tracker, promote_session_report
+from repro.core import Tracker, TuningSession, promote_session_report
 from repro.core import configstore
 from repro.core.configstore import ConfigStore, Context
 from repro.core.registry import get_component, settings_for
@@ -156,6 +156,7 @@ def _child_put(root, ctx_dict, settings):
     ConfigStore(root=root).put(Context.from_dict(ctx_dict), settings)
 
 
+@pytest.mark.slow  # spawns a child interpreter to write the store
 def test_cross_process_persistence(store):
     ctx = _ctx("b4q1024k1024d64")
     proc = multiprocessing.get_context("spawn").Process(

@@ -39,7 +39,8 @@ def test_codegen_roundtrip(tmp_path):
     rec = mod.unpack_hashtable(payload)
     assert rec["instance_id"] == 7 and rec["collisions"] == 42
     # generic pack/unpack agree with generated code
-    rec2 = unpack_telemetry(meta, pack_telemetry(meta, 7, {"time_us": 123.5, "collisions": 42, "memory_bytes": 8192, "load_factor_ppm": 500000}))
+    rec2 = unpack_telemetry(meta, pack_telemetry(meta, 7, {
+        "time_us": 123.5, "collisions": 42, "memory_bytes": 8192, "load_factor_ppm": 500000}))
     assert rec2["collisions"] == rec["collisions"]
 
 
@@ -107,6 +108,7 @@ def test_agentcore_inprocess_tunes_hashtable():
     assert core.best.value < 60000
 
 
+@pytest.mark.slow  # spawns an agent daemon (fresh interpreter + channel)
 def test_agent_process_end_to_end():
     """Full production shape: agent in a separate process over shm channel."""
     meta = get_component("spinlock")

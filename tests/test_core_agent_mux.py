@@ -169,6 +169,7 @@ def test_mux_rejects_duplicate_session_keys():
 
 
 # ------------------------------------------------------------- end-to-end
+@pytest.mark.slow  # spawns an agent daemon (fresh interpreter + channel)
 def test_agent_process_multiplexes_three_instances():
     """Acceptance: ONE AgentProcess tunes 3 instances over ONE channel, and
     each session_report is no worse than its single-session baseline."""

@@ -8,6 +8,10 @@ from pathlib import Path
 
 import pytest
 
+# Every test here boots a fresh interpreter + 8-device XLA runtime: the
+# CI fast lane deselects the whole module (test.sh --fast).
+pytestmark = pytest.mark.slow
+
 ROOT = Path(__file__).resolve().parent.parent
 
 

@@ -1,5 +1,4 @@
 """Per-kernel correctness: Pallas (interpret mode) and jnp variants vs oracles."""
-import math
 
 import jax
 import jax.numpy as jnp

@@ -27,7 +27,7 @@ except ModuleNotFoundError:  # pragma: no cover - exercised in hypothesis-less C
 
 from repro.core.optimizers import BayesOpt, make_optimizer
 from repro.core.optimizers.bayesopt import dedup_rows
-from repro.core.optimizers.engine import JaxGP, BatchedBayesOpt, batched_ask, bucket_of
+from repro.core.optimizers.engine import BatchedBayesOpt, JaxGP, batched_ask, bucket_of
 from repro.core.optimizers.gaussian_process import KERNELS
 from repro.core.tunable import Categorical, Float, Int, TunableSpace
 

@@ -11,7 +11,6 @@ import jax.numpy as jnp
 import numpy as np
 
 try:
-    import hypothesis
     import hypothesis.strategies as st
     from hypothesis import given, settings
 except ModuleNotFoundError:  # pragma: no cover - exercised in hypothesis-less CI

@@ -1,9 +1,6 @@
 """Runtime substrate: checkpoint atomicity/resume, fault policy, elastic replan,
 data pipeline determinism, loss-decrease integration."""
-import json
-from pathlib import Path
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -14,7 +11,6 @@ from repro.runtime.checkpoint import (AsyncCheckpointer, latest_step,
                                       restore_checkpoint, save_checkpoint)
 from repro.runtime.elastic import usable_factorization
 from repro.runtime.fault import HeartbeatMonitor, RestartPolicy, StragglerDetector
-from repro.runtime.steps import init_train_state, make_train_step
 from repro.runtime.train_loop import run_training
 
 

@@ -1,0 +1,114 @@
+"""core.stats: robust summaries, adaptive repetition, A/B comparator verdicts."""
+import numpy as np
+import pytest
+
+from repro.core import stats
+
+
+# ---------------------------------------------------------- robust summaries
+def test_robust_location_and_spread_resist_outliers():
+    vals = [10.0, 11.0, 12.0, 11.5, 10.5, 1000.0]  # one GC-pause-style outlier
+    assert stats.median(vals) == pytest.approx(11.25)
+    assert stats.mad(vals) < 2.0  # the outlier does not blow up the spread
+    assert stats.trimmed_mean(vals, trim=0.2) < 15.0
+    assert stats.trimmed_mean([5.0]) == 5.0
+
+
+def test_bootstrap_ci_brackets_median_and_is_deterministic():
+    rng = np.random.default_rng(3)
+    vals = rng.normal(50.0, 2.0, 40).tolist()
+    lo, hi = stats.bootstrap_ci(vals, seed=5)
+    assert lo <= stats.median(vals) <= hi
+    assert (lo, hi) == stats.bootstrap_ci(vals, seed=5)  # seeded → reproducible
+    assert stats.bootstrap_ci([7.0]) == (7.0, 7.0)  # degenerate, not an error
+    with pytest.raises(ValueError):
+        stats.bootstrap_ci([])
+
+
+# ------------------------------------------------------- adaptive repetition
+def test_adaptive_measurement_converges_on_low_noise():
+    vals = iter([100.0, 100.1, 99.9, 100.0, 100.05] * 20)
+    m = stats.measure_adaptive(lambda: next(vals), target_rel_ci=0.05,
+                               min_reps=5, max_reps=50)
+    assert m.converged and m.reps < 50
+    assert m.location == pytest.approx(100.0, rel=0.01)
+    assert m.rel_ci_width <= 0.05
+
+
+def test_adaptive_measurement_respects_rep_budget():
+    rng = np.random.default_rng(0)
+    m = stats.measure_adaptive(lambda: float(rng.normal(100, 80)),
+                               target_rel_ci=1e-6, min_reps=3, max_reps=12)
+    assert m.reps == 12 and not m.converged  # budget capped, summarized anyway
+    assert len(m.values) == 12
+
+
+def test_adaptive_measurement_respects_wall_budget():
+    rng = np.random.default_rng(0)
+    m = stats.measure_adaptive(lambda: float(rng.normal(100, 80)),
+                               target_rel_ci=1e-6, min_reps=4, max_reps=10_000,
+                               budget_s=0.0)
+    assert m.reps == 4  # min_reps always run; no new call after budget
+
+
+# ------------------------------------------------------------ A/B comparator
+def _two(seed=0, n=25, loc=100.0, scale=4.0, factor=1.0):
+    rng = np.random.default_rng(seed)
+    return rng.normal(loc, scale, n).tolist(), (rng.normal(loc, scale, n) * factor).tolist()
+
+
+def test_comparator_detects_planted_2x_regression():
+    base, cand = _two(factor=2.0)
+    cmp = stats.compare(base, cand)
+    assert cmp.verdict == "regressed" and not cmp.ok
+    assert cmp.p_value is not None and cmp.p_value <= 0.05
+    assert cmp.effect == pytest.approx(1.0, abs=0.2)
+
+
+def test_comparator_does_not_flag_same_distribution_noise():
+    base, cand = _two(factor=1.0)
+    cmp = stats.compare(base, cand)
+    assert cmp.verdict == "noise" and cmp.ok
+
+
+def test_comparator_detects_improvement_and_mode_flip():
+    base, cand = _two(factor=0.5)
+    assert stats.compare(base, cand).verdict == "improved"
+    # Under mode="max" (throughput) halving the metric is a regression.
+    assert stats.compare(base, cand, mode="max").verdict == "regressed"
+
+
+def test_comparator_is_deterministic_under_seed():
+    base, cand = _two(factor=1.15, scale=8.0)  # borderline shift
+    runs = {stats.compare(base, cand, seed=9).p_value for _ in range(3)}
+    assert len(runs) == 1  # same samples + seed → identical p-value/verdict
+
+
+def test_comparator_singleton_falls_back_to_effect_size():
+    # Analytic estimates (perf.hillclimb) are singletons: no p-value, the
+    # decision is effect-only — same three-way contract.
+    reg = stats.compare([100.0], [220.0])
+    assert reg.verdict == "regressed" and reg.p_value is None
+    assert stats.compare([100.0], [101.0]).verdict == "noise"
+    assert stats.compare([100.0], [80.0]).verdict == "improved"
+
+
+def test_comparator_large_shift_without_significance_is_noise():
+    # Hugely overlapping tiny samples: effect may clear the tolerance but the
+    # permutation test cannot — the verdict must stay noise, not regressed.
+    base = [100.0, 140.0, 80.0, 120.0, 60.0]
+    cand = [110.0, 150.0, 90.0, 130.0, 70.0]
+    cmp = stats.compare(base, cand, min_effect=0.05)
+    assert cmp.verdict == "noise"
+
+
+def test_comparator_input_validation():
+    with pytest.raises(ValueError):
+        stats.compare([], [1.0])
+    with pytest.raises(ValueError):
+        stats.compare([1.0], [1.0], mode="bogus")
+
+
+def test_measure_interleaved_pairs_samples():
+    a, b = stats.measure_interleaved(lambda: 1.0, lambda: 2.0, reps=4)
+    assert a == [1.0] * 4 and b == [2.0] * 4
