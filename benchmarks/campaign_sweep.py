@@ -1,0 +1,156 @@
+"""Campaign warm-start transfer: iterations-to-best, warm vs cold.
+
+The fleet-campaign claim worth a trajectory line is not "it tunes" — the
+single-session benchmarks cover that — but the *transfer* economics: a cell
+warm-started from the nearest stored context must reach
+within-tolerance-of-best in fewer evaluations than the identical cell cold-
+started.  This benchmark plants a deterministic objective whose optimum
+drifts smoothly across workload buckets (the situation transfer assumes:
+neighboring shape buckets prefer neighboring configs), tunes source buckets
+into a config store, then tunes target buckets twice — cold (fresh store)
+and warm (source store) — with identical seeds, and records both
+iterations-to-best distributions.
+
+Everything is seeded and the objective is synthetic, so ``--quick`` reruns
+are bit-reproducible (the runner's requirement for gateable records).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+import time
+from pathlib import Path
+from typing import Any, Dict, List
+
+import numpy as np
+
+from repro.core import smartcomponents as _smart  # noqa: F401 — registers hashtable
+from repro.core.campaign import Campaign, CampaignCell, evals_to_reach
+from repro.core.configstore import ConfigStore
+from repro.core.registry import get_component
+
+COMPONENT = "hashtable"          # borrowed 3-d tunable space; objective is synthetic
+OBJECTIVE = "time_us"
+WORK_ROOT = Path("results/campaign/sweep")
+DRIFT = 0.04                     # optimum shift per log2 bucket step
+
+
+def _planted_measure(seed: int):
+    """Deterministic objective: squared distance (in encoded space) to a
+    per-workload optimum that drifts DRIFT per bucket step — so a neighbor
+    bucket's best config is informative but not optimal here."""
+    space = get_component(COMPONENT).space
+    rng = np.random.default_rng(seed)
+    base = rng.uniform(0.25, 0.75, size=len(space))
+
+    def target(workload: str) -> np.ndarray:
+        step = np.log2(float(workload.lstrip("s")))
+        return np.clip(base + DRIFT * step, 0.0, 1.0)
+
+    def measure(cell: CampaignCell, settings: Dict[str, Any]) -> Dict[str, float]:
+        x = space.encode(space.validate(settings))
+        v = float(np.sum((x - target(cell.workload)) ** 2)) * 1000.0
+        return {"time_us": v, "collisions": int(v), "memory_bytes": 1,
+                "load_factor_ppm": 1}
+
+    return measure
+
+
+def _cells(workloads: List[str], budget: int, seed: int) -> List[CampaignCell]:
+    return [CampaignCell(COMPONENT, wl, OBJECTIVE, optimizer="bo",
+                         budget=budget, seed=seed + i)
+            for i, wl in enumerate(workloads)]
+
+
+def run(quick: bool = False, seed: int = 7) -> Dict[str, Any]:
+    sources = ["s128", "s1024"]
+    targets = ["s256", "s2048"] if quick else ["s256", "s512", "s2048", "s4096"]
+    budget = 10 if quick else 14
+    measure = _planted_measure(seed)
+    if WORK_ROOT.exists():
+        shutil.rmtree(WORK_ROOT)  # journals must not resume across bench runs
+
+    t0 = time.time()
+    warm_store = ConfigStore(root=str(WORK_ROOT / "store_warm"))
+    cold_store = ConfigStore(root=str(WORK_ROOT / "store_cold"))
+    Campaign(_cells(sources, budget + 4, seed), measure, campaign_id="sweep-src",
+             store=warm_store, journal_root=str(WORK_ROOT)).run()
+
+    cold = Campaign(_cells(targets, budget, seed + 100), measure,
+                    campaign_id="sweep-cold", store=cold_store,
+                    journal_root=str(WORK_ROOT), warm_start=False).run()
+    warm = Campaign(_cells(targets, budget, seed + 100), measure,
+                    campaign_id="sweep-warm", store=warm_store,
+                    journal_root=str(WORK_ROOT), warm_start=True).run()
+
+    res: Dict[str, Any] = {"quick": quick, "seed": seed, "budget": budget,
+                           "sources": sources, "wall_s": 0.0, "cells": {}}
+    cold_iters, warm_iters = [], []
+    for wl in targets:
+        cid = f"{COMPONENT}@{wl}"
+        c, w = cold[cid], warm[cid]
+        # One shared goalpost per cell: the better of the two runs' bests.
+        goal = min(c.best_value, w.best_value)
+        ci = evals_to_reach(c.values, goal, tol=0.10) or budget + 1
+        wi = evals_to_reach(w.values, goal, tol=0.10) or budget + 1
+        cold_iters.append(ci)
+        warm_iters.append(wi)
+        res["cells"][cid] = {
+            "cold_iters": ci, "warm_iters": wi,
+            "cold_best": c.best_value, "warm_best": w.best_value,
+            "warm_source": (w.warm_start or {}).get("source_workload"),
+            "promoted": w.promoted,
+        }
+    res["cold_iters_total"] = int(sum(cold_iters))
+    res["warm_iters_total"] = int(sum(warm_iters))
+    res["wall_s"] = time.time() - t0
+
+    print(f"campaign warm-start transfer over {len(targets)} cells "
+          f"(budget {budget}/cell, planted drift {DRIFT}/bucket-step):")
+    for cid, row in res["cells"].items():
+        print(f"  {cid:22s} cold {row['cold_iters']:3d} evals → warm "
+              f"{row['warm_iters']:3d} evals  (source {row['warm_source']})")
+    print(f"  total iterations-to-best: cold {res['cold_iters_total']} "
+          f"→ warm {res['warm_iters_total']}")
+
+    out = Path("results/bench")
+    out.mkdir(parents=True, exist_ok=True)
+    (out / "campaign_sweep.json").write_text(json.dumps(res, indent=1))
+    return res
+
+
+def bench(quick: bool = False, seed: int = 7) -> list:
+    """Unified-runner protocol: the warm-vs-cold iterations-to-best metric,
+    one sample per target cell (mode=min: fewer evaluations is better)."""
+    from repro.core.baseline import BenchRecord
+
+    res = run(quick=quick, seed=seed)
+    wl = f"synthetic_x{len(res['cells'])}b{res['budget']}"
+    meta = dict(sources=len(res["sources"]), budget=res["budget"])
+    return [
+        BenchRecord.for_component(
+            "campaign_sweep", "warm_iters_to_best",
+            [row["warm_iters"] for row in res["cells"].values()],
+            "campaign", wl, unit="evals", **meta),
+        BenchRecord.for_component(
+            "campaign_sweep", "cold_iters_to_best",
+            [row["cold_iters"] for row in res["cells"].values()],
+            "campaign", wl, unit="evals", **meta),
+    ]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--seed", type=int, default=7)
+    args = ap.parse_args()
+    res = run(quick=args.quick, seed=args.seed)
+    # Strict, matching check_bench.check_campaign_sweep: a tie is a failure
+    # of the transfer claim, and the CLI must agree with the gate.
+    return 0 if res["warm_iters_total"] < res["cold_iters_total"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -59,6 +59,17 @@ def check_kernel_autotune(expect_quick: Optional[bool] = None) -> None:
     assert len(d["best_samples_us"]) > 0 and len(d["default_samples_us"]) > 0
 
 
+def check_campaign_sweep(expect_quick: Optional[bool] = None) -> None:
+    d = _load("campaign_sweep", expect_quick)
+    assert d["cells"], "no campaign cells recorded"
+    assert d["warm_iters_total"] < d["cold_iters_total"], (
+        f"warm-start did not beat cold: warm {d['warm_iters_total']} vs "
+        f"cold {d['cold_iters_total']} total iterations-to-best")
+    for cid, row in d["cells"].items():
+        assert row["promoted"], f"{cid}: best config was not promoted"
+        assert row["warm_source"], f"{cid}: warm cell has no transfer source"
+
+
 def check_multi_instance(expect_quick: Optional[bool] = None) -> None:
     d = _load("multi_instance", expect_quick)
     assert d["instances"], "no instances recorded"
@@ -73,6 +84,7 @@ CHECKS = {
     "configstore_resolve": check_configstore_resolve,
     "kernel_autotune": check_kernel_autotune,
     "multi_instance": check_multi_instance,
+    "campaign_sweep": check_campaign_sweep,
 }
 
 

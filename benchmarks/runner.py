@@ -60,6 +60,12 @@ def _kernel_autotune(quick: bool, seed: int) -> List[BenchRecord]:
     return m.bench(quick=quick, seed=seed)
 
 
+@register("campaign_sweep")
+def _campaign_sweep(quick: bool, seed: int) -> List[BenchRecord]:
+    from . import campaign_sweep as m
+    return m.bench(quick=quick, seed=seed)
+
+
 # Post-run smoke assertions (shared with test.sh --bench-smoke and CI):
 # benchmark name -> check_bench check name.
 SMOKE_CHECKS = {
@@ -67,6 +73,7 @@ SMOKE_CHECKS = {
     "configstore_roundtrip": "configstore_resolve",
     "multi_instance": "multi_instance",
     "kernel_autotune": "kernel_autotune",
+    "campaign_sweep": "campaign_sweep",
 }
 
 

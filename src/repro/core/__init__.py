@@ -8,6 +8,7 @@ Layers (paper §2.1):
   telemetry         — app metrics + OS (/proc) + compiled-HLO "HW" counters
   tracking          — MLflow-like experiment store
   configstore       — persistent, context-keyed store of tuned configurations
+  campaign          — fleet orchestration of the component × workload grid
   stats             — noise-aware measurement + three-way A/B comparator
   baseline          — append-only perf trajectory + regression-gate baselines
   rpi               — Resource Performance Interfaces (perf-regression gates)
@@ -17,6 +18,7 @@ Layers (paper §2.1):
 from .agent import (AgentClient, AgentCore, AgentMux, AgentProcess, TrackedInstance,
                     TuningSession, drive_session, promote_session_report)
 from .baseline import BaselineStore, BenchRecord, GateReport
+from .campaign import Campaign, CampaignCell, CampaignJournal, CellResult, evals_to_reach
 from .channel import MlosChannel, ShmRing
 from .codegen import generate_source, load_generated, pack_telemetry, unpack_telemetry
 from .configstore import ConfigStore, Context, context_for, default_store, resolve_settings
@@ -31,6 +33,7 @@ from .tunable import Bool, Categorical, Float, Int, Tunable, TunableSpace
 __all__ = [
     "AgentClient", "AgentCore", "AgentMux", "AgentProcess", "TrackedInstance",
     "TuningSession", "drive_session", "promote_session_report",
+    "Campaign", "CampaignCell", "CampaignJournal", "CellResult", "evals_to_reach",
     "MlosChannel", "ShmRing",
     "generate_source", "load_generated", "pack_telemetry", "unpack_telemetry",
     "ConfigStore", "Context", "context_for", "default_store", "resolve_settings",

@@ -66,6 +66,14 @@ class TuningSession:
     :mod:`repro.core.configstore`): it travels with the session into the
     spawned agent, comes back attached to the ``session_report``, and keys
     where the session's best config persists.
+
+    ``prior`` warm-starts the session with observations measured under a
+    *related* context (campaign cross-context transfer): a list of
+    ``{"config": {...}, "value": <raw objective>}`` dicts, JSON-serializable
+    so it travels into a spawned agent like everything else.  Values are in
+    the session's raw objective convention (``mode`` is applied on injection)
+    and seed the optimizer's surrogate only — they never count as
+    evaluations of this session.
     """
 
     component: str
@@ -81,6 +89,7 @@ class TuningSession:
     budget: int = 50
     seed: int = 0
     context: Optional[Dict[str, str]] = None
+    prior: Optional[List[Dict[str, Any]]] = None
 
     @classmethod
     def for_component(cls, meta: ComponentMeta, objective: str,
@@ -134,6 +143,13 @@ class AgentCore:
         self.session = session
         self.space = TunableSpace.from_json(session.space_json)
         self.opt = make_optimizer(session.optimizer, self.space, seed=session.seed)
+        self.prior_injected = 0
+        if session.prior:
+            # Warm start: raw objective values flip into the internal
+            # minimized convention exactly as observe() does for telemetry.
+            sign = -1.0 if session.mode == "max" else 1.0
+            self.prior_injected = self.opt.inject_prior(
+                [(p["config"], sign * float(p["value"])) for p in session.prior])
         # 0 for 'direct' sessions (metric_fmt="" — no packed telemetry)
         self.payload_size = struct.calcsize(session.metric_fmt) if session.metric_fmt else 0
         self._pending_cfg: Optional[Dict[str, Any]] = None

@@ -1,0 +1,386 @@
+"""Fleet tuning campaigns: orchestrate the component × workload grid.
+
+The paper promises *continuous, instance-level* optimization; ROADMAP says
+"as many scenarios as you can imagine".  Until now each context (component ×
+workload × hw × sw) was tuned by a hand-invoked session — the expert ritual
+performance-oriented DevOps warns about.  A :class:`Campaign` takes a
+declarative grid of :class:`CampaignCell`\\ s and drives them all:
+
+  * **One mux, one dispatch per round** — every cell is a
+    :class:`~repro.core.agent.TuningSession` behind a single
+    :class:`~repro.core.agent.AgentMux`; each round measures every pending
+    proposal and feeds the whole batch to ``observe_batch``, so all ready
+    sessions are priced by ``BatchedBayesOpt`` in ONE device dispatch (jax
+    backend), not N sequential model refits.
+  * **Warm-start transfer** — a new cell seeds its optimizer with
+    observations from the *nearest stored context*
+    (:meth:`ConfigStore.nearest_entry`: the PR-3 fallback chain first, then
+    relaxed-workload nearest-bucket matching), attacking the
+    repeated-work-per-context cost the SPE-in-DevOps survey names.  Priors
+    inform the surrogate and replay the neighbor's incumbent first; they
+    never count as evaluations, so iterations-to-best is comparable across
+    warm and cold runs.
+  * **Resumable journal** — every evaluation and cell completion appends to
+    ``results/campaign/<id>.jsonl`` (append-only, schema-versioned like
+    ``core/baseline.py``); a killed campaign resumed under the same id skips
+    completed cells exactly (their results reconstruct from the journal, no
+    re-measurement).
+  * **Gated promotion** — each finished cell's best enters the
+    :class:`ConfigStore` through the existing gates: the ``stats.compare``
+    comparator versus the cell's measured default-config baseline (a tune
+    that significantly loses to the default never persists) and, when a
+    ``rpi_lookup`` is given, the RPI envelope.  Promoted entries carry
+    campaign provenance plus their top observations, which is what future
+    cells warm-start from — the flywheel.
+
+The driver is deterministic given the cells' seeds and a deterministic
+``measure``; tests exploit this.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from .agent import AgentMux, TuningSession
+from .codegen import pack_telemetry
+from .configstore import ConfigStore, Context, context_for, default_store
+from .registry import get_component
+
+__all__ = ["CampaignCell", "CellResult", "CampaignJournal", "Campaign",
+           "evals_to_reach", "CAMPAIGN_SCHEMA_VERSION"]
+
+CAMPAIGN_SCHEMA_VERSION = 1
+CAMPAIGN_ROOT = "results/campaign"
+# How many of a finished session's observations ride along in provenance as
+# warm-start fuel for future cells (best-first).
+N_TRANSFER_OBSERVATIONS = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class CampaignCell:
+    """One grid cell: tune ``component`` under ``workload``.
+
+    The cell is declarative — everything the orchestrator needs to build its
+    TuningSession.  ``cell_id`` (``component@workload``) keys the journal, so
+    a resumed campaign recognizes completed cells across processes.
+    """
+
+    component: str
+    workload: str
+    objective: str
+    mode: str = "min"
+    optimizer: str = "bo"
+    budget: int = 16
+    samples_per_config: int = 1
+    seed: int = 0
+
+    @property
+    def cell_id(self) -> str:
+        return f"{self.component}@{self.workload}"
+
+    def context(self) -> Context:
+        return context_for(self.component, self.workload)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class CellResult:
+    """Outcome of one cell — live-run or reconstructed from the journal."""
+
+    cell: CampaignCell
+    best_config: Dict[str, Any]
+    best_value: float                   # raw objective (mode applied back)
+    values: List[float]                 # raw objective per evaluation, in order
+    evaluations: int
+    promoted: bool
+    warm_start: Optional[Dict[str, Any]] = None  # {source_workload, distance, n_prior}
+    resumed: bool = False               # reconstructed from the journal, not re-run
+
+    def evals_to_reach(self, target: float, tol: float = 0.05) -> Optional[int]:
+        return evals_to_reach(self.values, target, mode=self.cell.mode, tol=tol)
+
+
+def evals_to_reach(values: Sequence[float], target: float, *,
+                   mode: str = "min", tol: float = 0.05) -> Optional[int]:
+    """1-based index of the first evaluation within relative ``tol`` of
+    ``target`` (the warm-vs-cold iterations-to-best metric), or None if the
+    trace never gets there.  ``mode`` orients "at least as good as"."""
+    slack = tol * max(abs(target), 1e-12)
+    for i, v in enumerate(values):
+        good = v <= target + slack if mode == "min" else v >= target - slack
+        if good:
+            return i + 1
+    return None
+
+
+class CampaignJournal:
+    """Append-only, schema-versioned campaign event log (one JSONL per id).
+
+    Same durability contract as ``core/baseline.py``: O_APPEND single-line
+    writes (concurrent writers interleave whole records), readers skip
+    torn/unknown-schema lines so a newer writer can't brick an older resume.
+    """
+
+    def __init__(self, campaign_id: str, root: str = CAMPAIGN_ROOT):
+        self.campaign_id = campaign_id
+        self.path = Path(root) / f"{campaign_id}.jsonl"
+
+    def append(self, kind: str, **fields: Any) -> Dict[str, Any]:
+        row = {"schema": CAMPAIGN_SCHEMA_VERSION, "kind": kind,
+               "campaign": self.campaign_id, "timestamp": time.time(), **fields}
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        fd = os.open(self.path, os.O_WRONLY | os.O_CREAT | os.O_APPEND, 0o644)
+        try:
+            os.write(fd, (json.dumps(row) + "\n").encode())
+        finally:
+            os.close(fd)
+        return row
+
+    def rows(self) -> List[Dict[str, Any]]:
+        if not self.path.exists():
+            return []
+        out = []
+        with open(self.path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    row = json.loads(line)
+                except json.JSONDecodeError:
+                    continue  # torn tail of a killed writer: skip, don't brick
+                if isinstance(row, dict) and row.get("schema") == CAMPAIGN_SCHEMA_VERSION:
+                    out.append(row)
+        return out
+
+    def completed(self) -> Dict[str, Dict[str, Any]]:
+        """cell_id → its ``cell_done`` row (the resume skip-list)."""
+        return {r["cell_id"]: r for r in self.rows() if r.get("kind") == "cell_done"}
+
+
+class Campaign:
+    """Drive a grid of cells to completion through one AgentMux.
+
+    ``measure(cell, settings) -> {metric: value}`` runs one evaluation of
+    ``settings`` under the cell's workload and returns the component's full
+    metric dict (same contract as the agent examples).  ``store`` defaults to
+    the process default ConfigStore; pass ``warm_start=False`` to force cold
+    starts (the A/B baseline).  ``baseline_reps`` default-config measurements
+    per cell feed the promote comparator gate.
+    """
+
+    def __init__(
+        self,
+        cells: Sequence[CampaignCell],
+        measure: Callable[[CampaignCell, Dict[str, Any]], Dict[str, float]],
+        *,
+        campaign_id: Optional[str] = None,
+        store: Optional[ConfigStore] = None,
+        journal_root: str = CAMPAIGN_ROOT,
+        warm_start: bool = True,
+        max_transfer_distance: float = math.inf,
+        baseline_reps: int = 2,
+        rpi_lookup: Optional[Callable[[str, str], Any]] = None,
+        warm_tol: float = 0.05,
+    ):
+        ids = [c.cell_id for c in cells]
+        if len(set(ids)) != len(ids):
+            dupes = sorted({i for i in ids if ids.count(i) > 1})
+            raise ValueError(f"duplicate campaign cells {dupes}")
+        self.cells = list(cells)
+        self.measure = measure
+        self.campaign_id = campaign_id or f"campaign-{os.getpid()}-{int(time.time())}"
+        self.store = store if store is not None else default_store()
+        self.journal = CampaignJournal(self.campaign_id, root=journal_root)
+        self.warm_start = warm_start
+        self.max_transfer_distance = max_transfer_distance
+        self.baseline_reps = baseline_reps
+        self.rpi_lookup = rpi_lookup
+        self.warm_tol = warm_tol
+        self.measure_calls = 0
+
+    # -- warm start -----------------------------------------------------------
+    def _prior_for(self, cell: CampaignCell) -> Tuple[Optional[List[Dict[str, Any]]],
+                                                      Optional[Dict[str, Any]]]:
+        """(session prior, warm_start info) from the nearest stored context.
+
+        Rule (see ROADMAP DESIGN): cross-context behavior goes through the
+        store's nearest-context query, never ad-hoc file reads.  The source
+        entry's provenance supplies real observations when it has them
+        (campaign-promoted entries do); otherwise its settings + recorded
+        best objective degrade to a single prior point.
+        """
+        if not self.warm_start:
+            return None, None
+        found = self.store.nearest_entry(cell.context(),
+                                         max_distance=self.max_transfer_distance)
+        if found is None:
+            return None, None
+        entry, dist = found
+        prov = entry.get("provenance", {})
+        obs = [o for o in prov.get("observations", [])
+               if isinstance(o, dict) and "config" in o and "value" in o]
+        if not obs and prov.get("best_objective") is not None:
+            obs = [{"config": entry["settings"], "value": prov["best_objective"]}]
+        if not obs:
+            return None, None
+        info = {"source_workload": entry["context"].get("workload"),
+                "distance": dist, "n_prior": len(obs)}
+        return obs, info
+
+    # -- promotion ------------------------------------------------------------
+    def _promote(self, cell: CampaignCell, core: Any, baseline: List[float],
+                 warm_info: Optional[Dict[str, Any]]) -> bool:
+        best = core.opt.best
+        sign = -1.0 if cell.mode == "max" else 1.0
+        best_raw = sign * best.value
+        # Best-first observations ride along as warm-start fuel for future
+        # cells (raw objective convention, deduped by the receiving optimizer).
+        ranked = sorted(core.opt.history, key=lambda o: o.value)
+        observations = [{"config": o.config, "value": sign * o.value}
+                        for o in ranked[:N_TRANSFER_OBSERVATIONS]]
+        best_samples = [sign * o.value for o in core.opt.history
+                        if o.config == best.config] or [best_raw]
+        rpi = self.rpi_lookup(cell.component, cell.workload) if self.rpi_lookup else None
+        provenance = {
+            "campaign": self.campaign_id,
+            "cell": cell.cell_id,
+            "budget": cell.budget,
+            "evaluations": core.evaluations,
+            "objective": cell.objective,
+            "best_objective": best_raw,
+            "warm_start": warm_info,
+            "observations": observations,
+        }
+        return self.store.promote(
+            cell.context(), best.config,
+            rpi=rpi, metrics={cell.objective: best_raw},
+            baseline=baseline or None, samples=best_samples if baseline else None,
+            mode=cell.mode, provenance=provenance)
+
+    # -- resume ---------------------------------------------------------------
+    def _resumed_results(self) -> Dict[str, CellResult]:
+        out: Dict[str, CellResult] = {}
+        by_id = {c.cell_id: c for c in self.cells}
+        for cell_id, row in self.journal.completed().items():
+            cell = by_id.get(cell_id)
+            if cell is None:
+                continue  # journal knows cells this grid no longer names
+            out[cell_id] = CellResult(
+                cell=cell, best_config=row["best_config"],
+                best_value=row["best_value"], values=list(row.get("values", [])),
+                evaluations=row.get("evaluations", len(row.get("values", []))),
+                promoted=bool(row.get("promoted")),
+                warm_start=row.get("warm_start"), resumed=True)
+        return out
+
+    # -- drive ----------------------------------------------------------------
+    def run(self) -> Dict[str, CellResult]:
+        results = self._resumed_results()
+        todo = [c for c in self.cells if c.cell_id not in results]
+        self.journal.append("campaign_start", cells=len(self.cells),
+                            resumed=len(results), grid=[c.to_dict() for c in todo])
+        if not todo:
+            return results
+
+        # One session per cell behind one mux.  Instance ids are assigned
+        # per component so (component_id, instance_id) demux keys are unique.
+        sessions: List[TuningSession] = []
+        by_key: Dict[Tuple[int, int], CampaignCell] = {}
+        warm: Dict[str, Optional[Dict[str, Any]]] = {}
+        baselines: Dict[str, List[float]] = {}
+        next_iid: Dict[str, int] = {}
+        for cell in todo:
+            meta = get_component(cell.component)
+            iid = next_iid.get(cell.component, 0)
+            next_iid[cell.component] = iid + 1
+            prior, info = self._prior_for(cell)
+            warm[cell.cell_id] = info
+            session = TuningSession.for_component(
+                meta, objective=cell.objective, workload=cell.workload,
+                mode=cell.mode, optimizer=cell.optimizer, budget=cell.budget,
+                samples_per_config=cell.samples_per_config, seed=cell.seed,
+                instance_id=iid, prior=prior)
+            sessions.append(session)
+            by_key[(meta.component_id, iid)] = cell
+            # Default-config baseline: the comparator gate's A side and the
+            # operator's "was tuning worth it" anchor, journaled per cell.
+            defaults = meta.space.defaults()
+            base = [float(self.measure(cell, defaults)[cell.objective])
+                    for _ in range(max(self.baseline_reps, 0))]
+            self.measure_calls += max(self.baseline_reps, 0)
+            baselines[cell.cell_id] = base
+            self.journal.append("cell_start", cell_id=cell.cell_id,
+                                cell=cell.to_dict(), warm_start=info,
+                                baseline=base)
+
+        mux = AgentMux(sessions)
+        metas = {c.component: get_component(c.component) for c in todo}
+        traces: Dict[str, List[float]] = {c.cell_id: [] for c in todo}
+        pending: Dict[Tuple[int, int], Dict[str, Any]] = {}
+
+        def handle(raw: bytes) -> None:
+            msg = json.loads(raw.decode())
+            if msg["type"] == "config_update":
+                meta = metas[msg["component"]]
+                pending[(meta.component_id, msg["instance"])] = msg["settings"]
+            elif msg["type"] == "session_report":
+                meta = metas[msg["component"]]
+                key = (meta.component_id, msg["instance"])
+                cell = by_key[key]
+                core = mux.cores[key]
+                promoted = self._promote(cell, core, baselines[cell.cell_id],
+                                         warm[cell.cell_id])
+                sign = -1.0 if cell.mode == "max" else 1.0
+                result = CellResult(
+                    cell=cell, best_config=dict(core.opt.best.config),
+                    best_value=sign * core.opt.best.value,
+                    values=traces[cell.cell_id], evaluations=core.evaluations,
+                    promoted=promoted, warm_start=warm[cell.cell_id])
+                results[cell.cell_id] = result
+                self.journal.append(
+                    "cell_done", cell_id=cell.cell_id,
+                    best_config=result.best_config, best_value=result.best_value,
+                    values=result.values, evaluations=result.evaluations,
+                    promoted=promoted, warm_start=warm[cell.cell_id])
+
+        for cmd in mux.start_commands():
+            handle(cmd)
+        while not mux.done:
+            # One round: measure every pending proposal, then feed the whole
+            # batch to the mux — all ready sessions' next asks are priced in
+            # a single batched dispatch (BatchedBayesOpt on jax backends).
+            round_payloads: List[bytes] = []
+            for key, core in mux.cores.items():
+                cfg = pending.pop(key, None)
+                if cfg is None or core.done:
+                    continue
+                cell = by_key[key]
+                samples = []
+                for _ in range(cell.samples_per_config):
+                    metrics = self.measure(cell, cfg)
+                    self.measure_calls += 1
+                    samples.append(float(metrics[cell.objective]))
+                    self.journal.append("eval", cell_id=cell.cell_id, config=cfg,
+                                        value=samples[-1])
+                    round_payloads.append(pack_telemetry(
+                        metas[cell.component], key[1], metrics))
+                # The trace records one point per *evaluation* — the mean the
+                # optimizer is told when samples_per_config > 1.
+                traces[cell.cell_id].append(sum(samples) / len(samples))
+            if not round_payloads:
+                break  # every live session is mid-ask: cannot make progress
+            for out in mux.observe_batch(round_payloads):
+                handle(out)
+        for rep in mux.final_reports():
+            handle(rep)
+        self.journal.append("campaign_done", cells=len(results),
+                            promoted=sum(r.promoted for r in results.values()))
+        return results

@@ -35,8 +35,10 @@ import dataclasses
 import functools
 import itertools
 import json
+import math
 import os
 import platform
+import re
 import sys
 import tempfile
 import time
@@ -50,7 +52,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 __all__ = [
     "Context", "ConfigStore", "bucket_pow2", "context_for",
-    "hardware_fingerprint", "sw_fingerprint",
+    "hardware_fingerprint", "sw_fingerprint", "workload_distance",
     "default_store", "set_default_store", "resolve_settings", "invalidate_cache",
 ]
 
@@ -134,6 +136,44 @@ def _match_rank(entry_ctx: Dict[str, str], query: Context) -> Optional[Tuple[int
         int(entry_ctx.get("hardware", WILDCARD) == query.hardware),
         int(entry_ctx.get("sw", WILDCARD) == query.sw),
     )
+
+
+_SIG_FIELD = re.compile(r"([a-zA-Z_]+?)(\d+)")
+_SIG_SHAPE = re.compile(r"(?:[a-zA-Z_]+\d+)+")
+
+
+def _sig_fields(workload: str) -> Dict[str, int]:
+    """Numeric fields of a bucketed workload signature.
+
+    ``b2q512k512d64`` → ``{b: 2, q: 512, k: 512, d: 64}``;
+    ``olmo_c256`` → ``{olmo_c: 256}``.  Only strings that are ENTIRELY
+    (name, number) pairs parse: a signature with stray separators (e.g.
+    ``olmo-1b_c256``, where the ``1`` is a model size, not a shape bucket)
+    parses empty rather than risk reading name digits as shape fields —
+    mis-parsing here would let :func:`workload_distance` call two different
+    families near neighbors.  Wildcards parse empty too.
+    """
+    if workload == WILDCARD or _SIG_SHAPE.fullmatch(workload) is None:
+        return {}
+    return {m.group(1): int(m.group(2)) for m in _SIG_FIELD.finditer(workload)}
+
+
+def workload_distance(a: str, b: str) -> float:
+    """How far apart two workload signatures are, in bucket steps.
+
+    0.0 for identical signatures; for two signatures of the same *family*
+    (identical field names, e.g. two flash_attention shape buckets) the
+    distance is the summed |log2| gap of their numeric fields — one bucket
+    step per unit, mirroring the power-of-two bucketing that produced them.
+    Different families (or unparseable signatures) are infinitely far: a
+    serve-capacity tune must never warm-start an attention kernel.
+    """
+    if a == b:
+        return 0.0
+    fa, fb = _sig_fields(a), _sig_fields(b)
+    if not fa or not fb or set(fa) != set(fb):
+        return math.inf
+    return sum(abs(math.log2(max(fa[k], 1)) - math.log2(max(fb[k], 1))) for k in fa)
 
 
 _STORE_TOKENS = itertools.count(1)
@@ -286,6 +326,41 @@ class ConfigStore:
     def resolve(self, query: Context) -> Optional[Dict[str, Any]]:
         e = self.resolve_entry(query)
         return dict(e["settings"]) if e is not None else None
+
+    def nearest_entry(self, query: Context, *,
+                      max_distance: float = math.inf,
+                      ) -> Optional[Tuple[Dict[str, Any], float]]:
+        """Best warm-start source for a context: ``(entry, workload_distance)``.
+
+        The cross-context transfer query (campaigns seed a new cell's
+        optimizer from it — see :mod:`repro.core.campaign`).  The normal
+        fallback chain runs first: an entry it resolves (exact workload, or
+        a component-wide ``"*"``) is *the* answer at distance 0.  Only when
+        the chain misses does the workload constraint relax: among all of the
+        component's entries, the one whose signature is the fewest bucket
+        steps away (:func:`workload_distance`) wins, hardware/software match
+        and recency breaking ties.  Different signature families never match,
+        so there is no cross-kernel contamination.  Returns None when nothing
+        is within ``max_distance`` — the caller cold-starts.
+        """
+        hit = self.resolve_entry(query)
+        if hit is not None:
+            return hit, 0.0
+        best: Optional[Dict[str, Any]] = None
+        best_key: Tuple = ()
+        best_dist = math.inf
+        for e in self._entries(query.component):
+            ctx = e["context"]
+            dist = workload_distance(ctx.get("workload", WILDCARD), query.workload)
+            if not math.isfinite(dist) or dist > max_distance:
+                continue
+            key = (-dist,
+                   int(ctx.get("hardware", WILDCARD) == query.hardware),
+                   int(ctx.get("sw", WILDCARD) == query.sw),
+                   e.get("provenance", {}).get("updated", 0.0))
+            if best is None or key > best_key:
+                best, best_key, best_dist = e, key, dist
+        return (best, best_dist) if best is not None else None
 
     # -- in-process override tier ---------------------------------------------
     def set_override(self, component: str, workload: str, kv: Dict[str, Any]) -> None:

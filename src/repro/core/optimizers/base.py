@@ -40,6 +40,15 @@ class Optimizer:
         self.history.append(obs)
         self._on_tell(obs)
 
+    def inject_prior(self, observations: List[Tuple[Dict[str, Any], float]]) -> int:
+        """Seed the optimizer with observations from a *related* context
+        (cross-context warm start).  Priors inform the surrogate model only:
+        they never enter ``history``, so ``best`` always names a config that
+        was actually measured under THIS context.  Model-free optimizers
+        ignore them; returns the number of observations absorbed.
+        """
+        return 0
+
     def _on_tell(self, obs: Observation) -> None:
         """Hook: incremental backends fold the observation into model state
         here (O(n²) for the jax GP's rank-1 Cholesky) instead of refitting

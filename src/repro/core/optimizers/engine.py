@@ -363,6 +363,49 @@ class JaxGP:
         if self.fit_hypers and self._tells_since_refit >= self.refit_every:
             self._hypers_fresh = False
 
+    def seed_observations(self, X: np.ndarray, y: np.ndarray) -> int:
+        """Bulk-inject prior (encoded config, value) pairs — warm-start path.
+
+        Cross-context transfer (campaign warm starts) arrives as a block of
+        observations from the nearest tuned context.  Loading them through
+        N ``observe`` calls would pay N rank-1 device dispatches before the
+        first real tell; instead the rows land straight in the padded host
+        buffers (growing the power-of-two bucket once, to fit them all) and
+        the resident factor is invalidated, so the next ``ensure_ready``
+        re-uploads and refactors exactly once.  Duplicate encodings fold
+        keep-best, same as ``observe``.  Returns the number of *new* rows.
+        """
+        X = np.atleast_2d(np.asarray(X, dtype=np.float64))
+        y = np.asarray(y, dtype=np.float64).reshape(-1)
+        if X.shape[0] != y.shape[0] or X.shape[1] != self.d:
+            raise ValueError(f"seed_observations: shapes {X.shape}/{y.shape} "
+                             f"do not match d={self.d}")
+        added = 0
+        changed = False
+        for xi, yi in zip(X, y):
+            xi = np.ascontiguousarray(xi)
+            key = xi.tobytes()
+            row = self._index.get(key)
+            if row is not None:
+                if float(yi) < self._yb[row]:
+                    self._yb[row] = float(yi)
+                    changed = True  # host y moved: resident _yd is now stale
+                continue
+            while self.n + 1 > self.max_n:
+                self._grow()
+            self._Xb[self.n] = xi
+            self._yb[self.n] = float(yi)
+            self._index[key] = self.n
+            self.n += 1
+            added += 1
+        if added or changed:
+            # One re-upload (+ refactor) at next ensure_ready picks up both
+            # the new rows and any keep-best folds into existing rows.
+            self._L = None
+            if self.fit_hypers:
+                self._hypers_fresh = False
+        return added
+
     def _grow(self) -> None:
         self.max_n *= 2
         Xb = np.zeros((self.max_n, self.d), dtype=np.float64)
@@ -428,12 +471,15 @@ class JaxGP:
 # ------------------------------------------------------------- batched asks
 def _jax_model_ready(opt: Any) -> bool:
     """True when ``opt`` is a jax-backed BayesOpt past its init phase (duck-
-    typed to avoid an import cycle with bayesopt.py)."""
-    return (
-        getattr(opt, "backend", None) == "jax"
-        and hasattr(opt, "_model_inputs")
-        and len(getattr(opt, "history", ())) >= getattr(opt, "n_init", 1 << 30)
-    )
+    typed to avoid an import cycle with bayesopt.py).  Optimizers exposing
+    ``model_ready`` (warm-started BO, where injected priors shorten the init
+    phase) decide for themselves."""
+    if getattr(opt, "backend", None) != "jax" or not hasattr(opt, "_model_inputs"):
+        return False
+    ready = getattr(opt, "model_ready", None)
+    if ready is not None:
+        return bool(ready)
+    return len(getattr(opt, "history", ())) >= getattr(opt, "n_init", 1 << 30)
 
 
 class BatchedBayesOpt:

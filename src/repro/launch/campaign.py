@@ -1,0 +1,268 @@
+"""Launch fleet tuning campaigns over declarative component × workload grids.
+
+The CLI face of :mod:`repro.core.campaign`: named grids expand to
+:class:`CampaignCell` lists (all three kernels across shape buckets,
+``serve_batching`` across capacity buckets, or the fast deterministic demo
+components), each component gets a real measurement function (the shared
+``launch/microbench`` harness for kernels, a reduced-model
+:class:`BatchedServer` run for serving), and the whole grid fans out through
+one mux with warm-start transfer and a resumable journal:
+
+    PYTHONPATH=src python -m repro.launch.campaign --grid kernels --quick
+    PYTHONPATH=src python -m repro.launch.campaign --grid demo --budget 8
+    PYTHONPATH=src python -m repro.launch.campaign --id <id> ...   # resume
+
+Re-running with the same ``--id`` resumes: completed cells are skipped
+exactly (reconstructed from ``results/campaign/<id>.jsonl``).
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import sys
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..core import configstore
+from ..core import smartcomponents as _smart  # noqa: F401 — registers demo components
+from ..core.campaign import Campaign, CampaignCell
+from ..core.configstore import _sig_fields
+from ..kernels.flash_attention import ops as attn_ops
+from ..kernels.rmsnorm import ops as rms_ops
+from ..kernels.ssd import ops as ssd_ops
+from .microbench import time_samples_us
+from .tuning import apply_overrides, parse_override
+
+__all__ = ["GRIDS", "grid_cells", "build_measure", "main"]
+
+# Representative workloads per grid.  Signatures are the components' own
+# bucketed workload-signature format, so campaign-tuned entries are exactly
+# what the ops resolve at serving time.
+GRIDS: Dict[str, Dict[str, List[str]]] = {
+    "kernels": {
+        "flash_attention": [
+            attn_ops.workload_signature(1, 128, 128, 64),
+            attn_ops.workload_signature(2, 256, 256, 64),
+            attn_ops.workload_signature(2, 512, 512, 64),
+            attn_ops.workload_signature(4, 1024, 1024, 64),
+        ],
+        "rmsnorm_kernel": [
+            rms_ops.workload_signature(2048, 512),
+            rms_ops.workload_signature(16384, 1024),
+        ],
+        "ssd_kernel": [
+            ssd_ops.workload_signature(1, 256, 4),
+            ssd_ops.workload_signature(2, 512, 4),
+        ],
+    },
+    "serving": {
+        "serve_batching": ["reduced_c128", "reduced_c512"],
+    },
+    "demo": {
+        "hashtable": ["n1024l2", "n2048l2", "n4096l4"],
+        "spinlock": ["heavy2", "heavy8"],
+    },
+}
+
+_OBJECTIVES = {
+    "flash_attention": ("time_us", "min"),
+    "rmsnorm_kernel": ("time_us", "min"),
+    "ssd_kernel": ("time_us", "min"),
+    "serve_batching": ("tokens_per_s", "max"),
+    "hashtable": ("collisions", "min"),
+    "spinlock": ("throughput_ops_s", "max"),
+}
+
+
+def grid_cells(grid: str, *, budget: int, optimizer: str, seed: int,
+               quick: bool = False) -> List[CampaignCell]:
+    if grid not in GRIDS:
+        raise ValueError(f"unknown grid {grid!r} (have {sorted(GRIDS)})")
+    cells = []
+    for comp, workloads in GRIDS[grid].items():
+        if quick:
+            workloads = workloads[:2]
+        objective, mode = _OBJECTIVES[comp]
+        for i, wl in enumerate(workloads):
+            cells.append(CampaignCell(
+                comp, wl, objective, mode=mode, optimizer=optimizer,
+                budget=budget, seed=seed + i))
+    return cells
+
+
+# -- measurement functions ----------------------------------------------------
+@functools.lru_cache(maxsize=16)
+def _attn_data(b: int, s: int, d: int):
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (b, s, 8, d), jnp.float32)
+    kv = jax.random.normal(key, (b, s, 4, d), jnp.float32)
+    return q, kv, kv
+
+
+def _measure_flash(cell: CampaignCell, settings: Dict[str, Any], reps: int) -> Dict[str, float]:
+    f = _sig_fields(cell.workload)
+    q, k, v = _attn_data(f["b"], f["q"], f["d"])
+    impl = settings["impl"]
+    if impl == "pallas" and jax.default_backend() != "tpu":
+        impl = "unrolled"  # interpret-mode timing is meaningless on CPU
+    fn = jax.jit(lambda q, k, v: attn_ops.flash_attention(
+        q, k, v, impl=impl, block_q=settings["block_q"], block_kv=settings["block_kv"]))
+    t = float(np.median(time_samples_us(fn, q, k, v, reps=reps)))
+    return {"time_us": t, "hlo_flops": 0.0, "hlo_bytes": 0.0}
+
+
+def _measure_rmsnorm(cell: CampaignCell, settings: Dict[str, Any], reps: int) -> Dict[str, float]:
+    f = _sig_fields(cell.workload)
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (f["r"], f["d"]), jnp.float32)
+    scale = jnp.ones((f["d"],), jnp.float32)
+    impl = settings["impl"] if jax.default_backend() == "tpu" else "jnp"
+    fn = jax.jit(lambda x, scale: rms_ops.rmsnorm(
+        x, scale, impl=impl, block_rows=settings["block_rows"]))
+    return {"time_us": float(np.median(time_samples_us(fn, x, scale, reps=reps)))}
+
+
+def _measure_ssd(cell: CampaignCell, settings: Dict[str, Any], reps: int) -> Dict[str, float]:
+    f = _sig_fields(cell.workload)
+    b, s, h = f["b"], f["s"], f["h"]
+    key = jax.random.PRNGKey(2)
+    ks = jax.random.split(key, 5)
+    p, n, g = 16, 8, 1
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h), jnp.float32))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,), jnp.float32) * 0.5)
+    B = jax.random.normal(ks[3], (b, s, g, n), jnp.float32)
+    C = jax.random.normal(ks[4], (b, s, g, n), jnp.float32)
+    impl = settings["impl"]
+    if impl == "pallas" and jax.default_backend() != "tpu":
+        impl = "chunked"
+    fn = jax.jit(lambda *a: ssd_ops.ssd(*a, impl=impl, chunk=settings["chunk"]))
+    t = float(np.median(time_samples_us(fn, x, dt, A, B, C, reps=reps)))
+    return {"time_us": t, "hlo_flops": 0.0}
+
+
+@functools.lru_cache(maxsize=1)
+def _serve_model():
+    from repro.configs import get_config
+    from repro.models import model as M
+
+    cfg = get_config("olmo-1b").reduced().validate()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+def _measure_serve(cell: CampaignCell, settings: Dict[str, Any], reps: int) -> Dict[str, float]:
+    from repro.runtime.serve_loop import BatchedServer
+
+    del reps  # one serve run is already an aggregate over many steps
+    f = _sig_fields(cell.workload)
+    capacity = next(iter(f.values()), 128)
+    params, cfg = _serve_model()
+    store = configstore.default_store()
+    # Route the proposal through the store's override tier for exactly this
+    # workload — the same path the server resolves at admission AND decode
+    # time, so EVERY tuned dimension (max_batch and max_new_tokens) is live
+    # in the measurement and the promoted entry describes measured behavior.
+    store.set_override(cell.component, cell.workload, dict(settings))
+    try:
+        server = BatchedServer(params, cfg, capacity=capacity, workload=cell.workload)
+        rng = np.random.default_rng(cell.seed)
+        for _ in range(12):
+            plen = int(rng.integers(4, 12))
+            server.submit(rng.integers(2, 250, size=plen).astype(np.int32))
+        m = server.run()  # max_new_tokens resolves from the override
+    finally:
+        store.clear_override(cell.component, cell.workload)
+    return {"tokens_per_s": float(m["tokens_per_s"]),
+            "p50_latency_s": float(m["p50_latency_s"])}
+
+
+def _measure_hashtable(cell: CampaignCell, settings: Dict[str, Any], reps: int) -> Dict[str, float]:
+    from repro.core.smartcomponents import TunableHashTable, hashtable_workload
+
+    del reps  # deterministic: collisions depend only on (settings, workload)
+    f = _sig_fields(cell.workload)
+    table = TunableHashTable(**settings)
+    return hashtable_workload(table, n_keys=f.get("n", 2000),
+                              lookup_ratio=float(f.get("l", 2)), seed=cell.seed)
+
+
+def _measure_spinlock(cell: CampaignCell, settings: Dict[str, Any], reps: int) -> Dict[str, float]:
+    from repro.core.smartcomponents import SpinLock, spinlock_workload
+
+    del reps  # deterministic discrete-event model
+    f = _sig_fields(cell.workload)
+    lock = SpinLock(**settings)
+    return spinlock_workload(lock, heavy_ops=f.get("heavy", 4), seed=cell.seed)
+
+
+_MEASURES = {
+    "flash_attention": _measure_flash,
+    "rmsnorm_kernel": _measure_rmsnorm,
+    "ssd_kernel": _measure_ssd,
+    "serve_batching": _measure_serve,
+    "hashtable": _measure_hashtable,
+    "spinlock": _measure_spinlock,
+}
+
+
+def build_measure(reps: int = 3):
+    """Component-dispatching ``measure(cell, settings)`` for the Campaign."""
+    def measure(cell: CampaignCell, settings: Dict[str, Any]) -> Dict[str, float]:
+        return _MEASURES[cell.component](cell, settings, reps)
+    return measure
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--grid", default="demo", choices=sorted(GRIDS))
+    ap.add_argument("--budget", type=int, default=12)
+    ap.add_argument("--optimizer", default="bo")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--id", default=None, help="campaign id (reuse to resume)")
+    ap.add_argument("--quick", action="store_true",
+                    help="2 workloads per component, short measurements")
+    ap.add_argument("--no-warm", action="store_true",
+                    help="disable cross-context warm starts (A/B baseline)")
+    ap.add_argument("--reps", type=int, default=3,
+                    help="timing repetitions per evaluation (kernel grids)")
+    ap.add_argument("--set", action="append", default=[], metavar="K=V",
+                    help="launch override, e.g. optimizer.backend=jax")
+    ap.add_argument("--list", action="store_true", help="print the grid and exit")
+    args = ap.parse_args(argv)
+
+    if args.grid == "serving":
+        from repro.runtime import serve_loop as _serve  # noqa: F401 — registers serve_batching
+    for s in args.set:
+        apply_overrides(parse_override(s))
+    budget = max(4, args.budget // 2) if args.quick else args.budget
+    cells = grid_cells(args.grid, budget=budget, optimizer=args.optimizer,
+                       seed=args.seed, quick=args.quick)
+    if args.list:
+        for c in cells:
+            print(f"{c.cell_id}  budget={c.budget} optimizer={c.optimizer} "
+                  f"objective={c.objective}({c.mode})")
+        return 0
+
+    campaign = Campaign(cells, build_measure(reps=2 if args.quick else args.reps),
+                        campaign_id=args.id, warm_start=not args.no_warm)
+    print(f"campaign {campaign.campaign_id}: {len(cells)} cells "
+          f"({args.grid} grid), journal → {campaign.journal.path}")
+    results = campaign.run()
+    promoted = sum(r.promoted for r in results.values())
+    for cid, r in sorted(results.items()):
+        warm = (f"warm←{r.warm_start['source_workload']}"
+                f"(d={r.warm_start['distance']:.0f})" if r.warm_start else "cold")
+        flag = "resumed" if r.resumed else ("promoted" if r.promoted else "rejected")
+        print(f"  {cid:42s} best={r.best_value:12.1f} evals={r.evaluations:3d} "
+              f"{warm:24s} {flag}")
+    print(f"{promoted}/{len(results)} cells promoted into the config store")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

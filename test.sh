@@ -11,7 +11,12 @@
 # Usage: bash test.sh [pytest args...]   e.g. bash test.sh tests/test_sharding.py -k moe
 #        bash test.sh --fast             tier-1 minus the slow spawn-subprocess
 #                                        tests (pytest -m "not slow") — the CI
-#                                        quick lane
+#                                        quick lane.  Includes the in-process
+#                                        campaign E2E suite (tests/test_campaign.py
+#                                        carries no slow marks).
+#        bash test.sh --cov              the --fast lane under pytest-cov with
+#                                        the ratcheting coverage floor (the CI
+#                                        coverage lane; needs pytest-cov)
 #        bash test.sh --bench-smoke      quick perf-harness sanity: runs
 #                                        benchmarks/optimizer_throughput.py --quick
 #                                        and benchmarks/configstore_roundtrip.py --quick
@@ -50,6 +55,18 @@ fi
 if [[ "${1:-}" == "--fast" ]]; then
   shift
   exec python -m pytest -q -m "not slow" "$@"
+fi
+
+if [[ "${1:-}" == "--cov" ]]; then
+  shift
+  # Coverage floor is a RATCHET: starts at the measured baseline of this
+  # lane (fast tests); raise it as coverage lands, never lower it.
+  python -c "import pytest_cov" 2>/dev/null || {
+    echo "test.sh --cov requires pytest-cov (pip install pytest-cov)"; exit 2; }
+  mkdir -p results/coverage
+  exec python -m pytest -q -m "not slow" \
+    --cov=repro --cov-report=term --cov-report=xml:coverage.xml \
+    --cov-report=html:results/coverage --cov-fail-under=60 "$@"
 fi
 
 exec python -m pytest -q "$@"

@@ -130,11 +130,12 @@ def test_agent_process_end_to_end():
             metrics = spinlock_workload(lock, heavy_ops=8, seed=3)
             emitter.emit(metrics)
             evals += 1
-        # Wait for final report.
-        for _ in range(20000):
-            client.poll(wait_s=0.002, deadline_s=0.01)
-            if client.reports:
-                break
+        # Wait for the final report: event-based with a wall-clock deadline
+        # (a fixed iteration count is a load-dependent flake).
+        from conftest import wait_until
+
+        assert wait_until(lambda: client.reports,
+                          tick=lambda: client.poll(wait_s=0.002, deadline_s=0.01))
         agent.stop()
         assert client.reports, "agent should publish a session report"
         rep = client.reports[0]

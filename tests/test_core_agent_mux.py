@@ -187,15 +187,21 @@ def test_agent_process_multiplexes_three_instances():
         tracked = {iid: TrackedInstance(TunableHashTable()) for iid in WORKLOADS}
         for iid, t in tracked.items():
             client.register("hashtable", t, instance_id=iid)
-        for _ in range(40000):
+        from conftest import wait_until
+
+        def drive():
             client.poll(wait_s=0.002, deadline_s=30.0)
             for iid, t in tracked.items():
                 if t.dirty:
                     t.dirty = False
                     chan.telemetry.push(
                         pack_telemetry(meta, iid, _measure(t.instance, iid)))
-            if len(client.reports) == len(WORKLOADS):
-                break
+
+        # Event-based wait (wall-clock deadline, not an iteration count):
+        # drive() makes progress between checks by applying configs and
+        # feeding fresh telemetry.
+        assert wait_until(lambda: len(client.reports) == len(WORKLOADS),
+                          timeout_s=60.0, tick=drive)
         agent.stop()
         assert len(client.reports) == len(WORKLOADS)
         for iid in WORKLOADS:

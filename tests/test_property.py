@@ -5,6 +5,7 @@ invariant; a deterministic fixed-seed sweep of every invariant always runs,
 so a hypothesis-less environment still exercises the same subjects.
 """
 import math
+import tempfile
 
 import jax
 import jax.numpy as jnp
@@ -17,10 +18,13 @@ except ModuleNotFoundError:  # pragma: no cover - exercised in hypothesis-less C
     given = None
 
 from repro.configs import ALL_ARCHS, get_config
+from repro.core import configstore as cs
+from repro.core.configstore import ConfigStore, Context, bucket_pow2, resolve_settings
 from repro.core.optimizers import make_optimizer
 from repro.core.tunable import Categorical, Float, Int, TunableSpace
 from repro.data.pipeline import PackedBatcher, SyntheticCorpus
 from repro.kernels.flash_attention import ref as attn_ref
+from repro.kernels.flash_attention.ops import workload_signature as attn_signature
 from repro.launch.specs import depth_units, scaled_config
 from repro.optim.compress import dequantize_int8, quantize_int8
 
@@ -110,6 +114,68 @@ def _check_cache_len_bounded(arch):
         assert cfg.cache_len(1 << 20) == (cfg.window if cfg.window else 1 << 20)
 
 
+def _check_bucket_pow2(n, m):
+    """bucket_pow2 is a power of two ≥ n, monotone, and idempotent."""
+    bn, bm = bucket_pow2(n), bucket_pow2(m)
+    assert bn >= max(n, 1) and bn & (bn - 1) == 0
+    assert bn < 2 * max(n, 1)  # tight: never more than one doubling away
+    if n <= m:
+        assert bn <= bm
+    assert bucket_pow2(bn) == bn
+
+
+def _check_workload_signature_stability(b, sq, skv, d, delta):
+    """Shapes inside one power-of-two bucket share a signature (⇒ identical
+    resolved settings: resolution is keyed on the signature string alone);
+    crossing a bucket boundary changes it."""
+    sq2 = bucket_pow2(sq)  # top of sq's bucket: same bucket by construction
+    assert attn_signature(b, sq, skv, d) == attn_signature(b, sq2, skv, d)
+    assert attn_signature(b, sq2, skv, d) != attn_signature(b, 2 * sq2 + delta, skv, d)
+    wl = attn_signature(b, sq, skv, d)
+    defaults = {"block_q": 512}
+    a = resolve_settings("prop_never_tuned", wl, defaults=defaults)
+    bb = resolve_settings("prop_never_tuned", attn_signature(b, sq2, skv, d),
+                          defaults=defaults)
+    assert a == bb == defaults
+
+
+# Precedence ladder, strongest first (the PR-3 contract the campaign's
+# promote/warm-start paths lean on).  Each tier is a (name, writer) pair;
+# writers run in RANDOMIZED order and resolution must not depend on it.
+_PRECEDENCE_TIERS = ["override", "explicit", "exact", "relaxed", "star", "global"]
+
+
+def _check_configstore_precedence(seed, n_tiers):
+    """With the strongest ``n_tiers``-th tier present, it must win — no
+    matter the order the tiers were written in."""
+    rng = np.random.default_rng(seed)
+    present = _PRECEDENCE_TIERS[n_tiers - 1:]
+    winner = present[0]
+    comp, wl = "prop_precedence", "b2q512k512d64"
+    with tempfile.TemporaryDirectory() as tmp:
+        store = ConfigStore(root=tmp + "/cs")
+        old = cs.set_default_store(store)
+        try:
+            hw, sw = cs.hardware_fingerprint(), cs.sw_fingerprint()
+            writers = {
+                "override": lambda: store.set_override(comp, wl, {"k": "override"}),
+                "exact": lambda: store.put(Context(comp, wl, hw, sw), {"k": "exact"}),
+                "relaxed": lambda: store.put(Context(comp, wl, "hwX", "swX"),
+                                             {"k": "relaxed"}),
+                "star": lambda: store.put(Context(comp, "*", hw, sw), {"k": "star"}),
+            }
+            todo = [t for t in present if t in writers]
+            for i in rng.permutation(len(todo)):
+                writers[todo[i]]()
+            explicit = {"k"} if "explicit" in present else None
+            got = resolve_settings(comp, wl, defaults={"k": "global"},
+                                   explicit=explicit)
+            want = "global" if winner == "explicit" else winner
+            assert got["k"] == want, (present, got)
+        finally:
+            cs.set_default_store(old)
+
+
 # ------------------------------------------------------- hypothesis harnesses
 if given is not None:
     SET = settings(max_examples=25, deadline=None)
@@ -161,6 +227,22 @@ if given is not None:
     def test_cache_len_bounded_by_window(arch):
         _check_cache_len_bounded(arch)
 
+    @given(st.integers(1, 1 << 20), st.integers(1, 1 << 20))
+    @SET
+    def test_bucket_pow2_properties(n, m):
+        _check_bucket_pow2(n, m)
+
+    @given(st.integers(1, 64), st.integers(1, 8192), st.integers(1, 8192),
+           st.sampled_from([32, 64, 128]), st.integers(0, 3))
+    @SET
+    def test_workload_signature_stable_within_bucket(b, sq, skv, d, delta):
+        _check_workload_signature_stability(b, sq, skv, d, delta)
+
+    @given(st.integers(0, 2**31), st.integers(1, len(_PRECEDENCE_TIERS)))
+    @settings(max_examples=15, deadline=None)
+    def test_configstore_precedence_order_independent(seed, n_tiers):
+        _check_configstore_precedence(seed, n_tiers)
+
 
 # ----------------------------------------------- deterministic fallback sweep
 def test_tunables_invariants_deterministic():
@@ -204,3 +286,27 @@ def test_config_invariants_deterministic():
         _check_param_count_linear(arch, 1, 5)
         _check_param_count_linear(arch, 4, 8)
         _check_cache_len_bounded(arch)
+
+
+def test_bucket_pow2_deterministic():
+    rng = np.random.default_rng(17)
+    for n, m in zip(rng.integers(1, 1 << 20, 20), rng.integers(1, 1 << 20, 20)):
+        _check_bucket_pow2(int(n), int(m))
+    for edge in (1, 2, 3, 4, 255, 256, 257, 1 << 19):
+        _check_bucket_pow2(edge, edge)
+
+
+def test_workload_signature_stability_deterministic():
+    rng = np.random.default_rng(23)
+    for _ in range(10):
+        _check_workload_signature_stability(
+            int(rng.integers(1, 65)), int(rng.integers(1, 8193)),
+            int(rng.integers(1, 8193)), int(rng.choice([32, 64, 128])),
+            int(rng.integers(0, 4)))
+
+
+def test_configstore_precedence_deterministic():
+    rng = np.random.default_rng(29)
+    for n_tiers in range(1, len(_PRECEDENCE_TIERS) + 1):
+        for seed in rng.integers(0, 2**31, 3):
+            _check_configstore_precedence(int(seed), n_tiers)
