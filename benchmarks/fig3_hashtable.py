@@ -17,11 +17,11 @@ import json
 from pathlib import Path
 from typing import Any, Dict
 
-import numpy as np
-
+from repro.core import stats
 from repro.core.optimizers import make_optimizer
 from repro.core.smartcomponents import TunableHashTable, hashtable_workload
 from repro.core.tracking import Tracker
+from repro.launch.microbench import time_samples_us
 
 INSTANCES = {
     "OpenRowSet": dict(skew=0.0, n_keys=3000, lookup_ratio=4.0),
@@ -29,17 +29,22 @@ INSTANCES = {
 }
 OPTIMIZERS = ["random", "bo_rbf", "bo_matern32", "one_at_a_time"]
 BUDGET = 22
-REPEATS = 3  # median-of-3 to tame 1-core timing noise
+REPEATS = 3  # sample count per config; aggregation/verdicts go through core.stats
 
 
-def _measure(table: TunableHashTable, wl: Dict[str, Any], config: Dict[str, Any], seed: int) -> Dict[str, float]:
-    vals = []
-    metrics = None
-    for r in range(REPEATS):
-        table.apply_and_rebuild(config)
-        metrics = hashtable_workload(table, seed=seed + r, **wl)
-        vals.append(metrics["time_us"])
-    metrics["time_us"] = float(np.median(vals))
+def _measure(table: TunableHashTable, wl: Dict[str, Any], config: Dict[str, Any], seed: int) -> Dict[str, Any]:
+    """App metrics from one workload run + a wall-clock sample distribution.
+
+    The per-config latency feed is ``microbench.time_samples_us`` so the
+    optimizer objective (its median) and the final tuned-vs-default claim
+    (``stats.compare`` over the raw samples) share one measurement path.
+    """
+    table.apply_and_rebuild(config)
+    metrics = dict(hashtable_workload(table, seed=seed, **wl))
+    samples = time_samples_us(
+        lambda: hashtable_workload(table, seed=seed, **wl), warmup=1, reps=REPEATS)
+    metrics["samples_us"] = samples
+    metrics["time_us"] = stats.median(samples)
     return metrics
 
 
@@ -50,25 +55,33 @@ def run(tracker: Tracker | None = None, budget: int = BUDGET) -> Dict[str, Any]:
     results: Dict[str, Any] = {}
     for inst, wl in INSTANCES.items():
         default_cfg = space.defaults()
-        base = _measure(table, wl, default_cfg, seed=0)["time_us"]
+        base_m = _measure(table, wl, default_cfg, seed=0)
+        base = base_m["time_us"]
         inst_res = {"default_time_us": base, "traces": {}}
         for opt_name in OPTIMIZERS:
             with tracker.start_run("fig3_hashtable", f"{inst}-{opt_name}") as run_:
                 opt = make_optimizer(opt_name, space, seed=17)
-                best = base
+                best, best_samples = base, base_m["samples_us"]
                 trace = []
                 for it in range(budget):
                     cfg = opt.ask()
                     m = _measure(table, wl, cfg, seed=0)
                     opt.tell(cfg, m["time_us"])
-                    best = min(best, m["time_us"])
+                    if m["time_us"] < best:
+                        best, best_samples = m["time_us"], m["samples_us"]
                     trace.append(best)
                     run_.log_metrics({"time_us": m["time_us"], "best_us": best}, step=it)
                 run_.log_params(opt.best.config)
+                # C1 is a CLAIM, so it ships with a stats.compare verdict over
+                # the raw sample distributions, not a bare median pair.
+                cmp = stats.compare(base_m["samples_us"], best_samples,
+                                    mode="min", min_effect=0.02)
                 inst_res["traces"][opt_name] = trace
                 inst_res.setdefault("best", {})[opt_name] = {
                     "time_us": best, "config": opt.best.config,
                     "improvement_pct": 100.0 * (base - best) / base,
+                    "verdict": cmp.verdict, "effect": cmp.effect,
+                    "p_value": cmp.p_value,
                 }
         results[inst] = inst_res
     return results
@@ -82,7 +95,8 @@ def main() -> Dict[str, Any]:
     for inst, r in res.items():
         print(f"  {inst}: default={r['default_time_us']:.0f}us")
         for opt, b in r["best"].items():
-            print(f"    {opt:14s} best={b['time_us']:.0f}us  improvement={b['improvement_pct']:.1f}%")
+            print(f"    {opt:14s} best={b['time_us']:.0f}us  improvement={b['improvement_pct']:.1f}%"
+                  f"  [{b['verdict']}]")
     return res
 
 

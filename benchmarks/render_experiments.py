@@ -4,6 +4,7 @@ from __future__ import annotations
 import json
 from pathlib import Path
 
+from repro.core import stats
 from repro.launch.roofline import load_cells, pick_hillclimb_cells, render_table
 
 
@@ -32,7 +33,7 @@ def dryrun_section(cells) -> str:
     times = [c["wall"]["production_compile_s"] for c in cells if c["status"] == "ok"]
     if times:
         lines.append(f"* production-pass compile time: median "
-                     f"{sorted(times)[len(times)//2]:.1f}s, max {max(times):.1f}s "
+                     f"{stats.median(times):.1f}s, max {max(times):.1f}s "
                      f"(scan-over-layers keeps HLO O(1) in depth).")
     return "\n".join(lines)
 

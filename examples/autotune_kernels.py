@@ -52,7 +52,7 @@ def main() -> None:
           f"(agent pid runs separately, telemetry over shm ring)")
     base = measure(meta.space.defaults())
     for it in range(BUDGET + 1):
-        s = dict(attn_ops.attention_settings.settings)
+        s = dict(attn_ops.attention_settings.settings_for("*"))
         t = measure(s)
         print(f"  [{it:2d}] impl={s['impl']:<13s} bq={s['block_q']:<5d} bkv={s['block_kv']:<5d}"
               f" → {t:7.0f} us")
@@ -61,7 +61,7 @@ def main() -> None:
         if got == 0:
             break
     agent.stop()
-    final = dict(attn_ops.attention_settings.settings)
+    final = dict(attn_ops.attention_settings.settings_for("*"))
     best = measure(final)
     print(f"default: {base:.0f} us → tuned: {best:.0f} us "
           f"({100*(base-best)/base:.1f}% faster)  settings={final}")

@@ -1,0 +1,30 @@
+"""mloslint — the repo's invariants as a CI-enforced static-analysis pass.
+
+The MLOS paper's first "curse" of hand-rolled software performance
+engineering is the lack of standardized, automated tooling: tuning
+contracts live in specialists' heads and decay as the codebase grows.
+This package turns the ROADMAP's DESIGN-note rules for future PRs into
+named, mechanically-checked invariants over the whole tree:
+
+  MLOS001  compat-bypass       drifted JAX APIs outside repro/compat.py
+  MLOS002  singleton-settings  global settings reads instead of settings_for
+  MLOS003  bare-perf-claim     timing/median claims not backed by core.stats
+  MLOS004  fork-hazard         os.fork / non-spawn multiprocessing
+  MLOS005  rejit-hazard        unbucketed history shapes, unguarded x64 arrays
+  MLOS006  tunables-contract   settings reads vs the declared TunableSpace
+  MLOS007  journal-append-only truncating writes against append-only journals
+
+Entry point: ``python -m repro.analysis.lint`` (see :mod:`repro.analysis.lint`).
+The package is stdlib-only (``ast`` + ``json``) so the CI lint lane runs it
+without installing jax/numpy.  Rule catalogue, rationale, and the escape
+hatch (``# mloslint: disable=MLOS00N -- justification``) are documented in
+``docs/INVARIANTS.md``.
+"""
+from .findings import Finding
+from .rules import ALL_RULES
+
+# NOTE: .lint is deliberately NOT imported here — ``python -m
+# repro.analysis.lint`` would otherwise load it twice (runpy warning).
+# Import ``run_lint`` from :mod:`repro.analysis.lint` directly.
+
+__all__ = ["Finding", "ALL_RULES"]

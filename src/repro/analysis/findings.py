@@ -1,0 +1,36 @@
+"""Finding records and their baseline fingerprints."""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Dict
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a file:line site.
+
+    ``snippet`` is the stripped source line — the fingerprint hashes
+    (rule, path, snippet) rather than the line number, so a baselined
+    finding survives unrelated edits that shift it up or down the file.
+    """
+
+    rule: str            # "MLOS001" .. "MLOS007" (or "MLOS000": malformed disable)
+    path: str            # repo-relative posix path
+    line: int
+    col: int
+    message: str
+    snippet: str = ""
+
+    @property
+    def fingerprint(self) -> str:
+        h = hashlib.sha1(f"{self.rule}|{self.path}|{self.snippet}".encode())
+        return h.hexdigest()[:16]
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["fingerprint"] = self.fingerprint
+        return d
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"

@@ -1,0 +1,191 @@
+"""mloslint driver: ``python -m repro.analysis.lint``.
+
+Parses every Python file under src/, tests/, benchmarks/, examples/,
+runs the MLOS001–MLOS007 rules (see :mod:`repro.analysis.rules`), applies
+``# mloslint: disable=`` suppressions, and ratchets the result against the
+checked-in baseline (``mloslint_baseline.json`` at the repo root).
+
+Exit codes: 0 clean (only baselined findings), 1 new findings or
+malformed disables, 2 internal/usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from pathlib import Path
+from typing import List, Optional
+
+from .findings import Finding
+from .parsing import MIN_JUSTIFICATION, ParsedModule, iter_py_files, parse_module
+from .ratchet import (
+    BaselineError,
+    RatchetResult,
+    apply_ratchet,
+    check_growth,
+    load_baseline,
+    save_baseline,
+)
+from .rules import ALL_RULES, RepoIndex
+
+DEFAULT_BASELINE = "mloslint_baseline.json"
+
+
+@dataclasses.dataclass
+class Report:
+    findings: List[Finding]          # post-suppression, pre-ratchet
+    ratchet: RatchetResult
+    files_scanned: int
+
+    @property
+    def ok(self) -> bool:
+        return not self.ratchet.new
+
+    def to_dict(self) -> dict:
+        return {
+            "files_scanned": self.files_scanned,
+            "total": len(self.findings),
+            "new": [f.to_dict() for f in self.ratchet.new],
+            "grandfathered": [f.to_dict() for f in self.ratchet.grandfathered],
+            "stale_baseline_entries": self.ratchet.stale,
+        }
+
+
+def _suppress(mod: ParsedModule, findings: List[Finding]) -> List[Finding]:
+    out = []
+    for f in findings:
+        if f.rule in mod.disabled_rules_for_line(f.line):
+            continue
+        out.append(f)
+    # Malformed escape hatches are themselves findings: a disable without a
+    # justification is exactly the undocumented tribal knowledge this tool
+    # exists to eliminate.
+    for d in mod.unjustified_disables():
+        snippet = mod.lines[d.line - 1].strip() if 0 < d.line <= len(mod.lines) else ""
+        out.append(Finding(
+            rule="MLOS000", path=mod.rel, line=d.line, col=0,
+            message=(f"mloslint disable without a justification (>= {MIN_JUSTIFICATION} "
+                     "chars after '--'): suppression not honored"),
+            snippet=snippet))
+    return out
+
+
+def collect_findings(root: Path, paths: Optional[List[Path]] = None) -> tuple[List[Finding], int]:
+    """Run all rules over the tree; returns (findings, files_scanned)."""
+    index = RepoIndex()
+    mods: List[ParsedModule] = []
+    for p in iter_py_files(root, paths):
+        mod = parse_module(p, root)
+        if mod is not None:
+            mods.append(mod)
+    findings: List[Finding] = []
+    for mod in mods:
+        per_mod: List[Finding] = []
+        for rule in ALL_RULES:
+            per_mod.extend(rule.check(mod, index))
+        findings.extend(_suppress(mod, per_mod))
+    # finalize-stage (cross-module) findings get suppression re-applied
+    # against their own module's disables.
+    by_rel = {m.rel: m for m in mods}
+    for rule in ALL_RULES:
+        for f in rule.finalize(index):
+            mod = by_rel.get(f.path)
+            if mod is not None and f.rule in mod.disabled_rules_for_line(f.line):
+                continue
+            findings.append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings, len(mods)
+
+
+def run_lint(root: Path, paths: Optional[List[Path]] = None,
+             baseline_path: Optional[Path] = None) -> Report:
+    findings, n_files = collect_findings(root, paths)
+    baseline = load_baseline(baseline_path) if baseline_path else {}
+    return Report(findings=findings, ratchet=apply_ratchet(findings, baseline),
+                  files_scanned=n_files)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="mloslint: enforce the repo's MLOS invariants (MLOS001-MLOS007).")
+    ap.add_argument("paths", nargs="*", type=Path,
+                    help="restrict to these files/dirs (default: whole tree)")
+    ap.add_argument("--root", type=Path, default=None,
+                    help="repo root (default: auto-detected from this package)")
+    ap.add_argument("--baseline", type=Path, default=None,
+                    help=f"baseline file (default: <root>/{DEFAULT_BASELINE})")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline: report every finding as new")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline from current findings (shrink-only)")
+    ap.add_argument("--allow-growth", action="store_true",
+                    help="permit --update-baseline to ADD fingerprints")
+    ap.add_argument("--json", type=Path, default=None, metavar="PATH",
+                    help="write the full JSON report here")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalogue and exit")
+    ap.add_argument("-q", "--quiet", action="store_true",
+                    help="suppress per-finding lines; print the summary only")
+    args = ap.parse_args(argv)
+
+    from .rules import RULES_BY_ID
+    if args.list_rules:
+        for rid, rule in sorted(RULES_BY_ID.items()):
+            doc = (rule.__doc__ or "").strip().split("\n")[0]
+            print(f"{rid}  {rule.name:<20} {doc}")
+        return 0
+
+    root = args.root
+    if root is None:
+        # src/repro/analysis/lint.py -> repo root is three parents above src/
+        root = Path(__file__).resolve().parents[3]
+    root = root.resolve()
+    baseline_path = None if args.no_baseline else (args.baseline or root / DEFAULT_BASELINE)
+
+    try:
+        report = run_lint(root, paths=args.paths or None, baseline_path=baseline_path)
+    except BaselineError as e:
+        print(f"mloslint: error: {e}", file=sys.stderr)
+        return 2
+
+    if args.update_baseline:
+        if baseline_path is None:
+            print("mloslint: error: --update-baseline requires a baseline path",
+                  file=sys.stderr)
+            return 2
+        old = load_baseline(baseline_path)
+        grown = check_growth(old, report.findings)
+        if grown and old and not args.allow_growth:
+            print(f"mloslint: refusing to grow the baseline by {len(grown)} finding(s) "
+                  "(the ratchet only shrinks; pass --allow-growth to override):",
+                  file=sys.stderr)
+            for f in grown:
+                print(f"  {f.render()}", file=sys.stderr)
+            return 1
+        save_baseline(baseline_path, report.findings)
+        print(f"mloslint: baseline written to {baseline_path} "
+              f"({len(report.findings)} finding(s))")
+        return 0
+
+    if args.json:
+        args.json.parent.mkdir(parents=True, exist_ok=True)
+        args.json.write_text(json.dumps(report.to_dict(), indent=2) + "\n",
+                             encoding="utf-8")
+
+    if not args.quiet:
+        for f in report.ratchet.new:
+            print(f.render())
+    n_new, n_old = len(report.ratchet.new), len(report.ratchet.grandfathered)
+    print(f"mloslint: {report.files_scanned} files, {n_new} new finding(s), "
+          f"{n_old} grandfathered, {len(report.ratchet.stale)} stale baseline entr"
+          f"{'y' if len(report.ratchet.stale) == 1 else 'ies'}")
+    if report.ratchet.stale:
+        print("mloslint: stale baseline entries no longer fire — shrink the baseline "
+              "with --update-baseline", file=sys.stderr)
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,175 @@
+"""Tree walking, module parsing, and the disable-comment escape hatch."""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+# Directories scanned relative to the repo root.  docs/, results/ and the
+# like hold no Python contracts; fixture trees used by tests mimic this
+# layout inside a tmp dir.
+SCAN_DIRS = ("src", "tests", "benchmarks", "examples")
+
+# ``# mloslint: disable=MLOS002 -- justification`` — the separator may be
+# "--", an em-dash, or ":"; the justification text is REQUIRED (≥ 10 chars)
+# or the disable is ignored and reported as MLOS000.
+_DISABLE_RE = re.compile(
+    r"#\s*mloslint:\s*(disable(?:-file)?)\s*=\s*([A-Z0-9,\s]+?)"
+    r"(?:\s*(?:--|—|:)\s*(.*))?$"
+)
+MIN_JUSTIFICATION = 10
+
+
+@dataclasses.dataclass
+class Disable:
+    rules: Set[str]
+    line: int            # line the comment sits on
+    target_line: int     # line it suppresses (same line, or the next one)
+    file_level: bool
+    justified: bool
+
+
+@dataclasses.dataclass
+class ParsedModule:
+    path: Path
+    rel: str                     # posix path relative to repo root
+    source: str
+    lines: List[str]
+    tree: ast.Module
+    disables: List[Disable]
+
+    # -- suppression ---------------------------------------------------------
+    def disabled_rules_for_line(self, line: int) -> Set[str]:
+        out: Set[str] = set()
+        for d in self.disables:
+            if not d.justified:
+                continue
+            if d.file_level or d.target_line == line:
+                out |= d.rules
+        return out
+
+    def unjustified_disables(self) -> List[Disable]:
+        return [d for d in self.disables if not d.justified]
+
+
+def _parse_disables(lines: List[str]) -> List[Disable]:
+    out: List[Disable] = []
+    for i, raw in enumerate(lines, start=1):
+        m = _DISABLE_RE.search(raw)
+        if not m:
+            continue
+        kind, ruleblob, reason = m.group(1), m.group(2), m.group(3) or ""
+        rules = {r.strip() for r in ruleblob.split(",") if r.strip()}
+        stripped = raw.strip()
+        standalone = stripped.startswith("#")
+        target = i
+        if standalone:
+            # a standalone disable governs the next CODE line — justification
+            # text may continue over further comment lines in between
+            target = i + 1
+            while target <= len(lines):
+                nxt = lines[target - 1].strip()
+                if nxt and not nxt.startswith("#"):
+                    break
+                target += 1
+        out.append(Disable(
+            rules=rules,
+            line=i,
+            target_line=target,
+            file_level=(kind == "disable-file"),
+            justified=len(reason.strip()) >= MIN_JUSTIFICATION,
+        ))
+    return out
+
+
+def parse_module(path: Path, root: Path) -> Optional[ParsedModule]:
+    try:
+        source = path.read_text(encoding="utf-8")
+        tree = ast.parse(source, filename=str(path))
+    except (SyntaxError, UnicodeDecodeError, OSError):
+        return None  # unparsable files are ruff's problem, not an invariant's
+    lines = source.splitlines()
+    return ParsedModule(
+        path=path,
+        rel=path.relative_to(root).as_posix(),
+        source=source,
+        lines=lines,
+        tree=tree,
+        disables=_parse_disables(lines),
+    )
+
+
+def iter_py_files(root: Path, paths: Optional[List[Path]] = None) -> Iterator[Path]:
+    """Python files under the scanned dirs (or explicit ``paths``), skipping
+    caches and VCS internals."""
+    if paths:
+        for p in paths:
+            if p.is_dir():
+                yield from sorted(q for q in p.rglob("*.py") if "__pycache__" not in q.parts)
+            elif p.suffix == ".py":
+                yield p
+        return
+    for d in SCAN_DIRS:
+        base = root / d
+        if not base.is_dir():
+            continue
+        yield from sorted(q for q in base.rglob("*.py") if "__pycache__" not in q.parts)
+    yield from sorted(root.glob("*.py"))
+
+
+# ----------------------------------------------------------------- AST helpers
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """'a.b.c' for nested Attribute/Name chains, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def import_map(tree: ast.Module) -> Dict[str, str]:
+    """Local alias -> fully-dotted origin, for Import and ImportFrom."""
+    out: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                out[a.asname or a.name.split(".")[0]] = a.name if a.asname else a.name.split(".")[0]
+                if a.asname:
+                    out[a.asname] = a.name
+        elif isinstance(node, ast.ImportFrom) and node.module and node.level == 0:
+            for a in node.names:
+                out[a.asname or a.name] = f"{node.module}.{a.name}"
+    return out
+
+
+def resolve_call_target(node: ast.Call, imports: Dict[str, str]) -> Optional[str]:
+    """Best-effort dotted target of a call, following import aliases."""
+    name = dotted_name(node.func)
+    if name is None:
+        return None
+    head, _, rest = name.partition(".")
+    origin = imports.get(head)
+    if origin:
+        return f"{origin}.{rest}" if rest else origin
+    return name
+
+
+def const_str(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None
+
+
+def walk_with_parents(tree: ast.AST) -> Iterator[Tuple[ast.AST, List[ast.AST]]]:
+    """(node, ancestors) pairs, ancestors ordered outermost-first."""
+    stack: List[Tuple[ast.AST, List[ast.AST]]] = [(tree, [])]
+    while stack:
+        node, parents = stack.pop()
+        yield node, parents
+        for child in ast.iter_child_nodes(node):
+            stack.append((child, parents + [node]))

@@ -1,0 +1,78 @@
+"""Baseline ratchet: grandfathered findings may shrink, never grow.
+
+The baseline is a checked-in JSON file mapping finding fingerprints
+(rule|path|source-line hashes — line-number independent, see
+:mod:`repro.analysis.findings`) to a human-readable record.  The lint run
+fails on any finding not in the baseline; baselined findings that no
+longer fire are reported as stale so the file can be shrunk in the same
+PR that fixes them.  ``--update-baseline`` refuses to add fingerprints
+unless ``--allow-growth`` is passed explicitly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Dict, List
+
+from .findings import Finding
+
+BASELINE_VERSION = 1
+
+
+class BaselineError(RuntimeError):
+    pass
+
+
+def load_baseline(path: Path) -> Dict[str, dict]:
+    """fingerprint -> baseline record.  Missing file == empty baseline."""
+    if not path.exists():
+        return {}
+    try:
+        data = json.loads(path.read_text(encoding="utf-8"))
+    except (json.JSONDecodeError, OSError) as e:
+        raise BaselineError(f"unreadable baseline {path}: {e}") from e
+    if not isinstance(data, dict) or "findings" not in data:
+        raise BaselineError(f"malformed baseline {path}: expected {{'findings': [...]}}")
+    out: Dict[str, dict] = {}
+    for rec in data["findings"]:
+        fp = rec.get("fingerprint")
+        if fp:
+            out[fp] = rec
+    return out
+
+
+def save_baseline(path: Path, findings: List[Finding]) -> None:
+    recs = sorted(
+        ({"fingerprint": f.fingerprint, "rule": f.rule, "path": f.path,
+          "message": f.message, "snippet": f.snippet} for f in findings),
+        key=lambda r: (r["rule"], r["path"], r["fingerprint"]))
+    payload = {"version": BASELINE_VERSION, "findings": recs}
+    path.write_text(json.dumps(payload, indent=2) + "\n", encoding="utf-8")
+
+
+@dataclasses.dataclass
+class RatchetResult:
+    new: List[Finding]          # not in baseline -> fail
+    grandfathered: List[Finding]  # matched baseline -> tolerated
+    stale: List[str]            # baselined fingerprints that no longer fire
+
+
+def apply_ratchet(findings: List[Finding], baseline: Dict[str, dict]) -> RatchetResult:
+    seen = set()
+    new: List[Finding] = []
+    old: List[Finding] = []
+    for f in findings:
+        fp = f.fingerprint
+        if fp in baseline:
+            old.append(f)
+            seen.add(fp)
+        else:
+            new.append(f)
+    stale = sorted(fp for fp in baseline if fp not in seen)
+    return RatchetResult(new=new, grandfathered=old, stale=stale)
+
+
+def check_growth(old: Dict[str, dict], findings: List[Finding]) -> List[Finding]:
+    """Findings whose fingerprints a baseline update would ADD."""
+    return [f for f in findings if f.fingerprint not in old]

@@ -142,6 +142,8 @@ def _compiled(kernel: str) -> Dict[str, Any]:
         l = solve_triangular(L, k_vec, lower=True)
         k_ss = sv + nv + _JITTER
         l_ss = jnp.sqrt(jnp.maximum(k_ss - l @ l, 1e-12))
+        # mloslint: disable=MLOS005 -- integer index mask, dtype-neutral; this closure
+        # is only ever traced via tell() paths that run under the engine's enable_x64.
         row = jnp.where(jnp.arange(L.shape[0]) < n, l, 0.0)
         row = row.at[n].set(l_ss)
         return (L.at[n].set(row), X.at[n].set(x_new), yd.at[n].set(y_new),

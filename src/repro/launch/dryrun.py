@@ -1,4 +1,7 @@
 import os
+# mloslint: disable-file=MLOS002 -- this module IS the launch-layer tier machinery: it
+# snapshots, pins, and restores raw global-tier .settings around dry-run cells so that
+# everything else can stay on settings_for; reads here are save/restore, not resolution.
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 # ^ MUST precede any jax import: jax locks the device count at first init.
 # The 512 placeholder host devices exist ONLY for this dry-run process so

@@ -117,6 +117,8 @@ def current_settings(contexts: bool = True) -> Dict[str, Dict[str, Any]]:
     """Flat settings report: the global tier under plain component names,
     plus (when ``contexts``) one ``comp@workload`` entry per context known to
     the config store — each fully resolved through the fallback chain."""
+    # mloslint: disable=MLOS002 -- reporting the raw global tier is the point here; the
+    # per-context resolutions are emitted separately below via the store.
     out = {name: dict(inst.settings) for name, inst in SINGLETONS.items()}
     out["optimizer"] = optimizer_defaults()
     if contexts:

@@ -111,7 +111,7 @@ def _maybe_scan(body: Callable, carry: Any, xs: Any, length: int, *, scan: bool)
 
 
 def remat_wrap(fn: Callable, policy: Optional[str] = None) -> Callable:
-    policy = policy or stack_settings.settings["remat"]
+    policy = policy or stack_settings.settings_for("*")["remat"]
     if policy == "none":
         return fn
     if policy == "dots":

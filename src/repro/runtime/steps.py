@@ -108,9 +108,11 @@ def make_train_step(
 
             gz = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
             carry0 = (gz, jnp.zeros((), jnp.float32))
-            from ..models.transformer import stack_settings
+            from ..models.transformer import stack_settings, stack_workload
 
-            if stack_settings.settings["scan_layers"]:
+            wl = stack_workload(cfg.family, batch["tokens"].shape[0],
+                                batch["tokens"].shape[1], cfg.n_layers)
+            if stack_settings.settings_for(wl)["scan_layers"]:
                 (grads, lsum), _ = jax.lax.scan(acc_body, carry0, mbatch)
             else:  # dry-run counter passes unroll the µbatch loop too
                 carry = carry0

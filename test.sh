@@ -30,6 +30,12 @@
 #                                        and FAILS on a statistically significant
 #                                        regression vs the stored baseline
 #                                        (noise-level jitter passes).
+#        bash test.sh --lint-invariants  mloslint: the repo's MLOS invariants
+#                                        (docs/INVARIANTS.md, MLOS001-MLOS007)
+#                                        checked over the whole tree, ratcheted
+#                                        against mloslint_baseline.json; writes
+#                                        results/analysis/lint_report.json.
+#                                        Stdlib-only (no jax needed).
 set -euo pipefail
 cd "$(dirname "$0")"
 export PYTHONPATH="$PWD/src${PYTHONPATH:+:$PYTHONPATH}"
@@ -50,6 +56,11 @@ if [[ "${1:-}" == "--bench-gate" ]]; then
   shift
   python -m benchmarks.runner --quick --gate "$@"
   exit 0
+fi
+
+if [[ "${1:-}" == "--lint-invariants" ]]; then
+  shift
+  exec python -m repro.analysis.lint --json results/analysis/lint_report.json "$@"
 fi
 
 if [[ "${1:-}" == "--fast" ]]; then
