@@ -70,6 +70,24 @@ def check_campaign_sweep(expect_quick: Optional[bool] = None) -> None:
         assert row["warm_source"], f"{cid}: warm cell has no transfer source"
 
 
+def check_compile_cold_warm(expect_quick: Optional[bool] = None) -> None:
+    d = _load("compile_cold_warm", expect_quick)
+    assert len(d["cold_s"]) >= 6 and len(d["warm_s"]) >= 6, "too few samples"
+    assert all(s > 0 for s in d["cold_s"] + d["warm_s"])
+    v = d["verdict"]
+    assert v["verdict"] == "improved", (
+        f"warm restart did not beat cold compile: {v}")
+    assert v["candidate_location"] < v["baseline_location"], v
+    xr = d["xla_runtime"]
+    assert xr["promoted"], "xla_runtime winner was not promoted"
+    entry = xr["entry"]
+    assert entry is not None, "no stored xla_runtime entry"
+    assert entry["context"]["component"] == "xla_runtime", entry
+    assert entry["context"]["hardware"], "entry not keyed by hardware fingerprint"
+    assert entry["provenance"]["source"] == "compile_cold_warm", entry
+    assert d["counters"]["misses"] >= 1, d["counters"]
+
+
 def check_multi_instance(expect_quick: Optional[bool] = None) -> None:
     d = _load("multi_instance", expect_quick)
     assert d["instances"], "no instances recorded"
@@ -85,6 +103,7 @@ CHECKS = {
     "kernel_autotune": check_kernel_autotune,
     "multi_instance": check_multi_instance,
     "campaign_sweep": check_campaign_sweep,
+    "compile_cold_warm": check_compile_cold_warm,
 }
 
 

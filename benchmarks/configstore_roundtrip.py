@@ -31,7 +31,7 @@ from repro.core import configstore
 from repro.core.registry import get_component
 from repro.core.tunable import Categorical, TunableSpace
 from repro.kernels.flash_attention import ops as attn_ops
-from repro.launch.microbench import median_time_us
+from repro.launch.microbench import jit_candidate, median_time_us
 
 CONTEXT_SHAPES = {
     # workload signature → concrete call shape (distinct pow2 buckets)
@@ -66,9 +66,12 @@ def _measure(shape: Dict[str, int], settings: Dict[str, Any]) -> Dict[str, float
     q = jax.random.normal(key, (b, s, h, d), jnp.float32)
     kk = jax.random.normal(key, (b, s, k, d), jnp.float32)
     vv = jax.random.normal(key, (b, s, k, d), jnp.float32)
-    fn = jax.jit(lambda q, kk, vv: attn_ops.flash_attention(
-        q, kk, vv, impl=settings["impl"], block_q=settings["block_q"],
-        block_kv=settings["block_kv"]))
+    fn = jit_candidate(
+        "flash_attention",
+        lambda q, kk, vv: attn_ops.flash_attention(
+            q, kk, vv, impl=settings["impl"], block_q=settings["block_q"],
+            block_kv=settings["block_kv"]),
+        settings, attn_ops.workload_signature(b, s, s, d))
     return {"time_us": median_time_us(fn, q, kk, vv), "hlo_flops": 0.0, "hlo_bytes": 0.0}
 
 

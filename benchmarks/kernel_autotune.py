@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from repro.core.optimizers import make_optimizer
 from repro.core.tunable import Categorical, Int, TunableSpace
 from repro.kernels.flash_attention import ops as attn_ops
-from repro.launch.microbench import median_time_us, time_samples_us
+from repro.launch.microbench import jit_candidate, median_time_us, time_samples_us
 
 SHAPE = dict(b=2, s=1024, h=8, k=4, d=64)
 QUICK_SHAPE = dict(b=1, s=256, h=4, k=2, d=64)
@@ -38,8 +38,11 @@ def _jit_op(cfg: Dict[str, Any], shape: Dict[str, int]):
     q = jax.random.normal(key, (b, s, h, d), jnp.float32)
     kk = jax.random.normal(key, (b, s, k, d), jnp.float32)
     vv = jax.random.normal(key, (b, s, k, d), jnp.float32)
-    fn = jax.jit(lambda q, kk, vv: attn_ops.flash_attention(
-        q, kk, vv, impl=cfg["impl"], block_q=cfg["block_q"], block_kv=cfg["block_kv"]))
+    fn = jit_candidate(
+        "flash_attention",
+        lambda q, kk, vv: attn_ops.flash_attention(
+            q, kk, vv, impl=cfg["impl"], block_q=cfg["block_q"], block_kv=cfg["block_kv"]),
+        cfg, attn_ops.workload_signature(b, s, s, d))
     return fn, (q, kk, vv)
 
 

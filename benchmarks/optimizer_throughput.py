@@ -16,7 +16,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import os
 import statistics
 import time
 from pathlib import Path
@@ -26,7 +25,11 @@ from typing import Any, Dict, List
 # numbers recorded here are measured in the same configuration the tier-1
 # suite runs under.  (The batched ask itself is a fused vmap on one device;
 # pmap across host devices measured slower, see engine._batched_suggest_fn.)
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+# setdefault semantics: an operator-set XLA_FLAGS (or a tuned xla_runtime
+# child env) wins; the flag is only filled in when absent.
+from repro.core.compilecache import ensure_host_device_count
+
+ensure_host_device_count(8)
 
 import numpy as np
 

@@ -66,6 +66,12 @@ def _campaign_sweep(quick: bool, seed: int) -> List[BenchRecord]:
     return m.bench(quick=quick, seed=seed)
 
 
+@register("compile_cold_warm")
+def _compile_cold_warm(quick: bool, seed: int) -> List[BenchRecord]:
+    from . import compile_cold_warm as m
+    return m.bench(quick=quick, seed=seed)
+
+
 # Post-run smoke assertions (shared with test.sh --bench-smoke and CI):
 # benchmark name -> check_bench check name.
 SMOKE_CHECKS = {
@@ -74,6 +80,7 @@ SMOKE_CHECKS = {
     "multi_instance": "multi_instance",
     "kernel_autotune": "kernel_autotune",
     "campaign_sweep": "campaign_sweep",
+    "compile_cold_warm": "compile_cold_warm",
 }
 
 

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from repro.core import AgentClient, AgentProcess, MlosChannel, TelemetryEmitter, TuningSession
 from repro.core.registry import get_component
 from repro.kernels.flash_attention import ops as attn_ops
-from repro.launch.microbench import median_time_us
+from repro.launch.microbench import jit_candidate, median_time_us
 
 SHAPE = dict(b=2, s=512, h=8, k=4, d=64)
 BUDGET = 12
@@ -30,8 +30,12 @@ def measure(settings) -> float:
     impl = settings["impl"]
     if impl == "pallas":           # interpret-mode timing is meaningless on CPU
         impl = "unrolled"
-    fn = jax.jit(lambda q, kk, vv: attn_ops.flash_attention(
-        q, kk, vv, impl=impl, block_q=settings["block_q"], block_kv=settings["block_kv"]))
+    fn = jit_candidate(
+        "flash_attention",
+        lambda q, kk, vv: attn_ops.flash_attention(
+            q, kk, vv, impl=impl, block_q=settings["block_q"], block_kv=settings["block_kv"]),
+        {"impl": impl, "block_q": settings["block_q"], "block_kv": settings["block_kv"]},
+        attn_ops.workload_signature(b, s, s, d))
     return median_time_us(fn, q, kk, vv)
 
 

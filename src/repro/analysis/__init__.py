@@ -13,6 +13,7 @@ named, mechanically-checked invariants over the whole tree:
   MLOS005  rejit-hazard        unbucketed history shapes, unguarded x64 arrays
   MLOS006  tunables-contract   settings reads vs the declared TunableSpace
   MLOS007  journal-append-only truncating writes against append-only journals
+  MLOS008  env-flag-bypass     raw os.environ XLA_FLAGS writes outside compilecache
 
 Entry point: ``python -m repro.analysis.lint`` (see :mod:`repro.analysis.lint`).
 The package is stdlib-only (``ast`` + ``json``) so the CI lint lane runs it

@@ -15,7 +15,7 @@ class Finding:
     finding survives unrelated edits that shift it up or down the file.
     """
 
-    rule: str            # "MLOS001" .. "MLOS007" (or "MLOS000": malformed disable)
+    rule: str            # "MLOS001" .. "MLOS008" (or "MLOS000": malformed disable)
     path: str            # repo-relative posix path
     line: int
     col: int

@@ -1,7 +1,7 @@
 """mloslint driver: ``python -m repro.analysis.lint``.
 
 Parses every Python file under src/, tests/, benchmarks/, examples/,
-runs the MLOS001–MLOS007 rules (see :mod:`repro.analysis.rules`), applies
+runs the MLOS001–MLOS008 rules (see :mod:`repro.analysis.rules`), applies
 ``# mloslint: disable=`` suppressions, and ratchets the result against the
 checked-in baseline (``mloslint_baseline.json`` at the repo root).
 
@@ -109,7 +109,7 @@ def run_lint(root: Path, paths: Optional[List[Path]] = None,
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis.lint",
-        description="mloslint: enforce the repo's MLOS invariants (MLOS001-MLOS007).")
+        description="mloslint: enforce the repo's MLOS invariants (MLOS001-MLOS008).")
     ap.add_argument("paths", nargs="*", type=Path,
                     help="restrict to these files/dirs (default: whole tree)")
     ap.add_argument("--root", type=Path, default=None,

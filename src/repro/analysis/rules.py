@@ -1,4 +1,4 @@
-"""The invariant rules MLOS001–MLOS007 (see docs/INVARIANTS.md).
+"""The invariant rules MLOS001–MLOS008 (see docs/INVARIANTS.md).
 
 Each rule encodes one "rule for future PRs" from the ROADMAP DESIGN notes
 as an AST check.  Rules are static approximations by design: they resolve
@@ -846,8 +846,69 @@ class JournalAppendOnly(Rule):
                 and bool(node.args) and self._is_tainted(node.args[0], tainted))
 
 
+# =============================================================================
+# MLOS008 — env-flag-bypass
+# =============================================================================
+class EnvFlagBypass(Rule):
+    """``XLA_FLAGS`` is a tuned surface (the ``xla_runtime`` pseudo-component
+    in ``repro.core.compilecache``), and plain assignment clobbers whatever
+    the operator or the tuner already pinned.  Raw ``os.environ`` writes of
+    the flag string outside the compilecache/compat layer bypass both the
+    merge semantics and the config store — route through
+    ``merge_xla_flags`` / ``child_env`` / ``force_host_device_count``."""
+
+    id = "MLOS008"
+    name = "env-flag-bypass"
+
+    SCOPE = ("src", "benchmarks", "examples")
+    EXEMPT = ("src/repro/core/compilecache.py", "src/repro/compat.py")
+    _MSG = ("raw XLA_FLAGS environment write bypasses the xla_runtime "
+            "component: merge via repro.core.compilecache "
+            "(merge_xla_flags / child_env / force_host_device_count)")
+
+    def check(self, mod: ParsedModule, index: RepoIndex) -> List[Finding]:
+        if not _in(mod.rel, *self.SCOPE) or _in(mod.rel, *self.EXEMPT):
+            return []
+        if "XLA_FLAGS" not in mod.source:
+            return []
+        out: List[Finding] = []
+        imports = import_map(mod.tree)
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = node.targets if isinstance(node, ast.Assign) else [node.target]
+                for t in targets:
+                    if isinstance(t, ast.Subscript) \
+                            and self._is_environ(t.value, imports) \
+                            and const_str(t.slice) == "XLA_FLAGS":
+                        out.append(self._f(mod, node, self._MSG))
+            elif isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute):
+                fn = node.func
+                if fn.attr in ("setdefault", "pop") and self._is_environ(fn.value, imports):
+                    if node.args and const_str(node.args[0]) == "XLA_FLAGS":
+                        out.append(self._f(mod, node, self._MSG))
+                elif fn.attr == "update" and self._is_environ(fn.value, imports):
+                    for arg in node.args:
+                        if isinstance(arg, ast.Dict) and any(
+                                const_str(k) == "XLA_FLAGS" for k in arg.keys if k):
+                            out.append(self._f(mod, node, self._MSG))
+                elif (resolve_call_target(node, imports) or "") == "os.putenv":
+                    if node.args and const_str(node.args[0]) == "XLA_FLAGS":
+                        out.append(self._f(mod, node, self._MSG))
+        return out
+
+    @staticmethod
+    def _is_environ(node: ast.AST, imports: Dict[str, str]) -> bool:
+        full = dotted_name(node)
+        if not full:
+            return False
+        head, _, rest = full.partition(".")
+        origin = imports.get(head)
+        resolved = (f"{origin}.{rest}" if rest else origin) if origin else full
+        return resolved == "os.environ"
+
+
 ALL_RULES: List[Rule] = [
     CompatBypass(), SingletonSettings(), BarePerfClaim(), ForkHazard(),
-    RejitHazard(), TunablesContract(), JournalAppendOnly(),
+    RejitHazard(), TunablesContract(), JournalAppendOnly(), EnvFlagBypass(),
 ]
 RULES_BY_ID: Dict[str, Rule] = {r.id: r for r in ALL_RULES}

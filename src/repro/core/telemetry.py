@@ -25,7 +25,18 @@ from .channel import MlosChannel
 from .codegen import pack_telemetry
 from .registry import ComponentMeta
 
-__all__ = ["os_counters", "hlo_counters", "collective_bytes", "TelemetryEmitter", "Stopwatch"]
+__all__ = ["os_counters", "hlo_counters", "collective_bytes", "compile_cache_counters",
+           "TelemetryEmitter", "Stopwatch"]
+
+
+def compile_cache_counters() -> Dict[str, float]:
+    """Jit-registry telemetry (``core.compilecache``): hits, misses, live
+    entries, and the compile-seconds the process has paid — the counters the
+    persistent compilation cache is meant to drive toward zero.  Lazy import:
+    telemetry stays importable before the backend initializes."""
+    from .compilecache import cache_counters
+
+    return cache_counters()
 
 _PAGE = os.sysconf("SC_PAGE_SIZE")
 _CLK = os.sysconf("SC_CLK_TCK")

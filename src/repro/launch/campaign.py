@@ -34,7 +34,7 @@ from ..core.configstore import _sig_fields
 from ..kernels.flash_attention import ops as attn_ops
 from ..kernels.rmsnorm import ops as rms_ops
 from ..kernels.ssd import ops as ssd_ops
-from .microbench import time_samples_us
+from .microbench import jit_candidate, time_samples_us
 from .tuning import apply_overrides, parse_override
 
 __all__ = ["GRIDS", "grid_cells", "build_measure", "main"]
@@ -109,8 +109,12 @@ def _measure_flash(cell: CampaignCell, settings: Dict[str, Any], reps: int) -> D
     impl = settings["impl"]
     if impl == "pallas" and jax.default_backend() != "tpu":
         impl = "unrolled"  # interpret-mode timing is meaningless on CPU
-    fn = jax.jit(lambda q, k, v: attn_ops.flash_attention(
-        q, k, v, impl=impl, block_q=settings["block_q"], block_kv=settings["block_kv"]))
+    fn = jit_candidate(
+        "flash_attention",
+        lambda q, k, v: attn_ops.flash_attention(
+            q, k, v, impl=impl, block_q=settings["block_q"], block_kv=settings["block_kv"]),
+        {"impl": impl, "block_q": settings["block_q"], "block_kv": settings["block_kv"]},
+        cell.workload)
     t = float(np.median(time_samples_us(fn, q, k, v, reps=reps)))
     return {"time_us": t, "hlo_flops": 0.0, "hlo_bytes": 0.0}
 
@@ -121,8 +125,11 @@ def _measure_rmsnorm(cell: CampaignCell, settings: Dict[str, Any], reps: int) ->
     x = jax.random.normal(key, (f["r"], f["d"]), jnp.float32)
     scale = jnp.ones((f["d"],), jnp.float32)
     impl = settings["impl"] if jax.default_backend() == "tpu" else "jnp"
-    fn = jax.jit(lambda x, scale: rms_ops.rmsnorm(
-        x, scale, impl=impl, block_rows=settings["block_rows"]))
+    fn = jit_candidate(
+        "rmsnorm_kernel",
+        lambda x, scale: rms_ops.rmsnorm(x, scale, impl=impl,
+                                         block_rows=settings["block_rows"]),
+        {"impl": impl, "block_rows": settings["block_rows"]}, cell.workload)
     return {"time_us": float(np.median(time_samples_us(fn, x, scale, reps=reps)))}
 
 
@@ -140,7 +147,9 @@ def _measure_ssd(cell: CampaignCell, settings: Dict[str, Any], reps: int) -> Dic
     impl = settings["impl"]
     if impl == "pallas" and jax.default_backend() != "tpu":
         impl = "chunked"
-    fn = jax.jit(lambda *a: ssd_ops.ssd(*a, impl=impl, chunk=settings["chunk"]))
+    fn = jit_candidate("ssd_kernel",
+                       lambda *a: ssd_ops.ssd(*a, impl=impl, chunk=settings["chunk"]),
+                       {"impl": impl, "chunk": settings["chunk"]}, cell.workload)
     t = float(np.median(time_samples_us(fn, x, dt, A, B, C, reps=reps)))
     return {"time_us": t, "hlo_flops": 0.0}
 

@@ -1,12 +1,15 @@
-import os
 # mloslint: disable-file=MLOS002 -- this module IS the launch-layer tier machinery: it
 # snapshots, pins, and restores raw global-tier .settings around dry-run cells so that
 # everything else can stay on settings_for; reads here are save/restore, not resolution.
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from ..core.compilecache import force_host_device_count
+
+force_host_device_count(512)
 # ^ MUST precede any jax import: jax locks the device count at first init.
 # The 512 placeholder host devices exist ONLY for this dry-run process so
 # jax.make_mesh can build the production meshes (16×16 single-pod, 2×16×16
 # multi-pod); smoke tests and benchmarks see the real single CPU device.
+# force_host_device_count merges into any operator-set XLA_FLAGS instead of
+# clobbering them (only the device-count flag is overridden).
 #
 # Usage:
 #   PYTHONPATH=src python -m repro.launch.dryrun --all                # sweep

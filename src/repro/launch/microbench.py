@@ -9,12 +9,28 @@ warmup call absorbs jit compilation.
 from __future__ import annotations
 
 import time
-from typing import Any, Callable, List
+from typing import Any, Callable, Dict, List, Mapping
 
 import jax
 import numpy as np
 
-__all__ = ["median_time_us", "time_samples_us"]
+__all__ = ["jit_candidate", "median_time_us", "time_samples_us"]
+
+
+def jit_candidate(component: str, fn: Callable[..., Any],
+                  settings: Mapping[str, Any], workload: str = "") -> Callable:
+    """jit one autotune candidate through the compile-cache registry.
+
+    Keyed by (component, workload, settings) — candidate lambdas are rebuilt
+    fresh per evaluation, but an optimizer revisiting a config (dedup, warm
+    starts, campaign grids) gets the already-compiled callable back, and
+    repeat runs pull the XLA executable from the persistent cache instead of
+    recompiling every candidate from scratch."""
+    from ..core.compilecache import cached_jit
+
+    ctx: Dict[str, str] = {k: repr(v) for k, v in settings.items()}
+    return cached_jit(fn, key=f"autotune.{component}",
+                      context=(workload, tuple(sorted(ctx.items()))))
 
 
 def time_samples_us(fn: Callable[..., Any], *args: Any, warmup: int = 1,

@@ -16,13 +16,13 @@ from __future__ import annotations
 
 import argparse
 import json
-import os
 import subprocess
 import sys
 from pathlib import Path
 from typing import Any, Dict, List, Optional
 
 from ..core import configstore, stats
+from ..core import compilecache
 from .tuning import parse_override, split_target
 
 # A candidate must cut the step bound by at least this relative margin for
@@ -84,7 +84,9 @@ def _dryrun(arch: str, shape: str, mesh: str, tag: str, sets: List[str],
         cmd += ["--set", s]
     if microbatches:
         cmd += ["--microbatches", str(microbatches)]
-    env = dict(os.environ)
+    # Child env carries the resolved xla_runtime settings (tuned XLA flags are
+    # startup-only, so they apply in the child, never retroactively here).
+    env = compilecache.child_env()
     env["PYTHONPATH"] = env.get("PYTHONPATH", "src")
     r = subprocess.run(cmd, capture_output=True, text=True, timeout=5400, env=env)
     suffix = f"{mesh}__{tag}" if tag else mesh

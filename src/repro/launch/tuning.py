@@ -11,6 +11,11 @@ flat namespace over both:
     outranks stored entries for that context only)
   * ``optimizer.backend=jax``            — the optimizer pseudo-component,
     cast through the same declared-spec path as real components.
+  * ``xla_runtime.host_device_count=4``  — the XLA-runtime pseudo-component
+    (:mod:`repro.core.compilecache`): overrides land in the config store's
+    override tier and take effect in *child* processes via ``child_env()``
+    (XLA only reads its flags at startup, so the current process is not
+    retroactively reconfigured).
 
 Values are cast using the target component's *tunable spec*, not guessed from
 their spelling: a ``Categorical`` whose choice is the string ``"1"`` arrives
@@ -21,6 +26,7 @@ from __future__ import annotations
 from typing import Any, Dict, Tuple
 
 from ..core import configstore
+from ..core.compilecache import XLA_RUNTIME_SPACE, resolve_xla_settings, set_xla_override
 from ..core.optimizers import optimizer_defaults, set_optimizer_defaults
 from ..core.registry import get_component
 from ..core.tunable import Categorical, Tunable, TunableSpace
@@ -54,6 +60,8 @@ OPTIMIZER_SPACE = TunableSpace([
 def _space_of(comp: str) -> TunableSpace:
     if comp == "optimizer":
         return OPTIMIZER_SPACE
+    if comp == "xla_runtime":
+        return XLA_RUNTIME_SPACE
     return get_component(comp).space
 
 
@@ -110,6 +118,11 @@ def apply_overrides(overrides: Dict[str, Dict[str, Any]]) -> None:
             # launch constructs onto the jitted engine (make_optimizer default).
             set_optimizer_defaults(**kv)
             continue
+        if comp == "xla_runtime":
+            # Pseudo-component: visible to child processes through
+            # compilecache.child_env(); never written into this process's env.
+            set_xla_override(XLA_RUNTIME_SPACE.subset(list(kv)).validate(kv))
+            continue
         SINGLETONS[comp].apply_settings(kv)
 
 
@@ -121,6 +134,7 @@ def current_settings(contexts: bool = True) -> Dict[str, Dict[str, Any]]:
     # per-context resolutions are emitted separately below via the store.
     out = {name: dict(inst.settings) for name, inst in SINGLETONS.items()}
     out["optimizer"] = optimizer_defaults()
+    out["xla_runtime"] = resolve_xla_settings()
     if contexts:
         for comp, workload in configstore.default_store().contexts():
             inst = SINGLETONS.get(comp)

@@ -115,7 +115,11 @@ class AsyncCheckpointer:
     def save(self, step: int, tree: Any, extra: Optional[Dict] = None,
              blocking: bool = False) -> None:
         self.wait()  # one in-flight save at a time
-        host_tree = jax.tree.map(np.asarray, tree)  # sync device→host snapshot
+        # Snapshot with an owning COPY, not np.asarray: on the CPU backend
+        # asarray can alias the device buffer zero-copy, and the train step
+        # donates its state — the next step would reuse that memory while the
+        # writer thread is still streaming it to disk (use-after-free).
+        host_tree = jax.tree.map(lambda a: np.array(a, copy=True), tree)
 
         def work():
             try:

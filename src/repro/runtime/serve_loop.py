@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.compilecache import cached_jit, config_signature
 from ..core.configstore import bucket_pow2
 from ..core.registry import MetricSpec, tunable_component
 from ..core.tunable import Int
@@ -71,8 +72,19 @@ class BatchedServer:
         self.params, self.cfg, self.capacity, self.eos_id = params, cfg, capacity, eos_id
         self.workload = workload or workload_signature(cfg.family, capacity)
         self.max_batch = serve_settings.settings_for(self.workload)["max_batch"]
-        self._decode = jax.jit(
-            lambda p, tok, caches, pos: M.decode_step(p, cfg, tok, caches, pos))
+        # Context-keyed compiled decode: two servers over the same (config,
+        # capacity, batch) share one compiled step in-process.  The KV
+        # caches (arg 2) are donated — each iteration rebinds them, so XLA
+        # may update in place instead of copying the full cache per token.
+        # Donation rules out persistence (deserializing a donating
+        # executable is a use-after-free, see cached_jit); per-token cache
+        # copies every step cost more than one sub-second decode compile
+        # per restart, so decode is the donating site.
+        self._decode = cached_jit(
+            lambda p, tok, caches, pos: M.decode_step(p, cfg, tok, caches, pos),
+            key="serve.decode_step",
+            context=(config_signature(cfg), self.workload, capacity, self.max_batch),
+            donate_argnums=(2,), persistent=False)
         self.queue: Deque[_Request] = deque()
         self.results: Dict[int, _Request] = {}
         self._next_rid = 0

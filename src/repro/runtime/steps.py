@@ -20,7 +20,7 @@ from ..optim.adamw import adamw_init, adamw_update
 from ..optim.schedules import warmup_cosine
 from ..parallel import sharding as shd
 
-__all__ = ["cast_for_compute", "make_train_step", "make_prefill_step",
+__all__ = ["cast_for_compute", "make_train_step", "jit_train_step", "make_prefill_step",
            "make_decode_step", "train_state_specs", "TrainHyper"]
 
 
@@ -132,6 +132,35 @@ def make_train_step(
         return {"params": new_params, "opt": new_opt, "step": state["step"] + 1}, metrics
 
     return train_step
+
+
+def jit_train_step(cfg: ModelConfig, hyper: Optional[TrainHyper] = None, *,
+                   microbatches: int = 1, donate: bool = False) -> Callable:
+    """The jitted train step, routed through the compile-cache registry.
+
+    Memoized by the full trace-determining context (config signature, the
+    class-a hyper constants baked into the trace, µbatch count), so repeated
+    constructions — restarts, benchmark children, multiple loops in one
+    process — share one compiled callable, and the XLA executable itself is
+    served from the persistent cache across processes.
+
+    ``donate=True`` donates the state (argnums 0) so parameters and Adam
+    moments update in place — and gives up persistence: a donating
+    executable must never be deserialized (see ``cached_jit``), so the
+    default is the persistent, non-donating step — restart latency is this
+    step's dominant cost, not peak state memory.
+    """
+    from ..core.compilecache import cached_jit, config_signature
+
+    hyper = hyper or TrainHyper()
+    ctx = (config_signature(cfg),
+           (hyper.base_lr, hyper.warmup, hyper.total, hyper.weight_decay,
+            hyper.clip_norm),
+           microbatches)
+    return cached_jit(make_train_step(cfg, hyper, microbatches=microbatches),
+                      key="train.step", context=ctx,
+                      donate_argnums=(0,) if donate else (),
+                      persistent=not donate)
 
 
 def make_prefill_step(cfg: ModelConfig, cache_capacity: int) -> Callable:

@@ -19,7 +19,7 @@ from ..data.pipeline import PackedBatcher, SyntheticCorpus
 from ..models.config import ModelConfig
 from .checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
 from .fault import StragglerDetector
-from .steps import TrainHyper, init_train_state, make_train_step
+from .steps import TrainHyper, init_train_state, jit_train_step
 
 __all__ = ["run_training"]
 
@@ -44,8 +44,7 @@ def run_training(
     hyper = hyper or TrainHyper()
     batcher = PackedBatcher(SyntheticCorpus(cfg.vocab_size, seed=seed),
                             global_batch, seq_len)
-    step_fn = jax.jit(make_train_step(cfg, hyper, microbatches=microbatches),
-                      donate_argnums=(0,))
+    step_fn = jit_train_step(cfg, hyper, microbatches=microbatches)
 
     state = init_train_state(jax.random.PRNGKey(seed), cfg)
     start = 0

@@ -18,9 +18,10 @@
 #                                        the ratcheting coverage floor (the CI
 #                                        coverage lane; needs pytest-cov)
 #        bash test.sh --bench-smoke      quick perf-harness sanity: runs
-#                                        benchmarks/optimizer_throughput.py --quick
-#                                        and benchmarks/configstore_roundtrip.py --quick
-#                                        and asserts both wrote valid JSON
+#                                        benchmarks/optimizer_throughput.py --quick,
+#                                        benchmarks/configstore_roundtrip.py --quick
+#                                        and benchmarks/compile_cold_warm.py --quick
+#                                        and asserts each wrote valid JSON
 #                                        (benchmarks/check_bench.py), so the
 #                                        tracked perf trajectory can't rot silently.
 #        bash test.sh --bench-gate       continuous-benchmarking gate: runs ALL
@@ -31,7 +32,7 @@
 #                                        regression vs the stored baseline
 #                                        (noise-level jitter passes).
 #        bash test.sh --lint-invariants  mloslint: the repo's MLOS invariants
-#                                        (docs/INVARIANTS.md, MLOS001-MLOS007)
+#                                        (docs/INVARIANTS.md, MLOS001-MLOS008)
 #                                        checked over the whole tree, ratcheted
 #                                        against mloslint_baseline.json; writes
 #                                        results/analysis/lint_report.json.
@@ -49,6 +50,11 @@ if [[ "${1:-}" == "--bench-smoke" ]]; then
   # distinct bests persisted, a fresh process resolves each, lookup cost recorded.
   python benchmarks/configstore_roundtrip.py --quick
   python -m benchmarks.check_bench configstore_resolve --expect-quick
+  # Cold vs warm compile across fresh interpreters: the persistent
+  # compilation cache must make restarts faster (stats.compare verdict),
+  # and the xla_runtime winner must promote + resolve through the store.
+  python benchmarks/compile_cold_warm.py --quick
+  python -m benchmarks.check_bench compile_cold_warm --expect-quick
   exit 0
 fi
 

@@ -391,6 +391,53 @@ def test_mlos007_silent_on_append_only_twin(tmp_path):
 
 
 # =============================================================================
+# MLOS008 env-flag-bypass
+# =============================================================================
+def test_mlos008_fires_on_raw_xla_flags_writes(tmp_path):
+    root = mini_repo(tmp_path, {
+        "src/repro/bad_flags.py": """\
+            import os
+            from os import environ
+
+            os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+            def prep():
+                environ.setdefault("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false")
+                os.environ.update({"XLA_FLAGS": "-x", "OTHER": "1"})
+                os.putenv("XLA_FLAGS", "-x")
+            """,
+    })
+    findings, rules = rules_fired(root)
+    assert "MLOS008" in rules
+    assert sum(f.rule == "MLOS008" for f in findings) == 4
+
+
+def test_mlos008_silent_on_merged_twin(tmp_path):
+    root = mini_repo(tmp_path, {
+        "src/repro/good_flags.py": """\
+            import os
+            from repro.core.compilecache import child_env, force_host_device_count
+
+            def prep():
+                force_host_device_count(512)
+                env = child_env()
+                env["XLA_FLAGS"] = "-x"        # plain dict, not os.environ
+                os.environ["PYTHONPATH"] = "src"  # a different variable entirely
+                return env
+            """,
+        # the component itself is the sanctioned home for the raw write
+        "src/repro/core/compilecache.py": """\
+            import os
+
+            def apply(flags):
+                os.environ["XLA_FLAGS"] = flags
+            """,
+    })
+    _, rules = rules_fired(root)
+    assert "MLOS008" not in rules
+
+
+# =============================================================================
 # Escape hatch: # mloslint: disable=
 # =============================================================================
 _FORK = """\
