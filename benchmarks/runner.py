@@ -72,6 +72,12 @@ def _compile_cold_warm(quick: bool, seed: int) -> List[BenchRecord]:
     return m.bench(quick=quick, seed=seed)
 
 
+@register("serve_scenarios")
+def _serve_scenarios(quick: bool, seed: int) -> List[BenchRecord]:
+    from . import serve_scenarios as m
+    return m.bench(quick=quick, seed=seed)
+
+
 # Post-run smoke assertions (shared with test.sh --bench-smoke and CI):
 # benchmark name -> check_bench check name.
 SMOKE_CHECKS = {
@@ -81,6 +87,7 @@ SMOKE_CHECKS = {
     "kernel_autotune": "kernel_autotune",
     "campaign_sweep": "campaign_sweep",
     "compile_cold_warm": "compile_cold_warm",
+    "serve_scenarios": "serve_scenarios",
 }
 
 

@@ -162,9 +162,12 @@ def decode_attention(
     """Single-token attention against a (possibly ring-buffered) KV cache.
 
     q: (B, 1, H, D); caches: (B, C, K, D) where C = cache capacity.
-    ``pos`` — scalar int32: number of tokens already in context (0-based index
-    of the current token).  For windowed caches (C == window) the cache is a
-    ring buffer indexed ``t % C``; validity is derived from ``pos``.
+    ``pos`` — int32, scalar or per-row ``(B,)``: number of tokens already in
+    context (0-based index of the current token).  A vector ``pos`` gives
+    every batch row its own validity horizon — the continuous-batching case
+    where each slot decodes at its own sequence position.  For windowed
+    caches (C == window) the cache is a ring buffer indexed ``t % C``;
+    validity is derived from ``pos``.
     """
     b, c, n_kv, d = k_cache.shape
     scale = scale or 1.0 / math.sqrt(q.shape[-1])
@@ -172,13 +175,13 @@ def decode_attention(
     s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_cache,
                    preferred_element_type=jnp.float32) * scale
     slot = jnp.arange(c)
+    # (1,1) for scalar pos, (B,1) per-row: one mask expression serves both.
+    pos_r = jnp.atleast_1d(pos)[:, None]
+    valid = slot[None, :] <= pos_r  # exact while pos < c
     if window and window == c:
         # ring buffer: slot holds token t where t ≡ slot (mod c) and t <= pos
-        valid = slot <= pos  # exact while pos < c
-        valid = jnp.where(pos >= c, jnp.ones_like(valid), valid)
-    else:
-        valid = slot <= pos
-    s = jnp.where(valid[None, None, None, None, :], s, _NEG_INF)
+        valid = jnp.where(pos_r >= c, jnp.ones_like(valid), valid)
+    s = jnp.where(valid[:, None, None, None, :], s, _NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v_cache.dtype), v_cache,
                    preferred_element_type=jnp.float32)

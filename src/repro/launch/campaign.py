@@ -173,9 +173,10 @@ def _measure_serve(cell: CampaignCell, settings: Dict[str, Any], reps: int) -> D
     params, cfg = _serve_model()
     store = configstore.default_store()
     # Route the proposal through the store's override tier for exactly this
-    # workload — the same path the server resolves at admission AND decode
-    # time, so EVERY tuned dimension (max_batch and max_new_tokens) is live
-    # in the measurement and the promoted entry describes measured behavior.
+    # workload — the same path the server resolves at construction, so EVERY
+    # tuned dimension (max_batch, max_new_tokens, admission, prefill_chunk,
+    # sync_interval) is live in the measurement and the promoted entry
+    # describes measured scheduler behavior.
     store.set_override(cell.component, cell.workload, dict(settings))
     try:
         server = BatchedServer(params, cfg, capacity=capacity, workload=cell.workload)
@@ -186,8 +187,10 @@ def _measure_serve(cell: CampaignCell, settings: Dict[str, Any], reps: int) -> D
         m = server.run()  # max_new_tokens resolves from the override
     finally:
         store.clear_override(cell.component, cell.workload)
-    return {"tokens_per_s": float(m["tokens_per_s"]),
-            "p50_latency_s": float(m["p50_latency_s"])}
+    # every metric the serve_batching meta declares — telemetry packing
+    # requires the full set
+    return {k: float(m[k]) for k in
+            ("tokens_per_s", "p50_latency_s", "queue_depth", "live_slots")}
 
 
 def _measure_hashtable(cell: CampaignCell, settings: Dict[str, Any], reps: int) -> Dict[str, float]:

@@ -138,7 +138,7 @@ def apply_attn_decode(
     params: Dict[str, jax.Array],
     x: jax.Array,                            # (B, 1, d_model)
     cache: Dict[str, jax.Array],
-    pos: jax.Array,                          # scalar int32: index of current token
+    pos: jax.Array,                          # int32 scalar or (B,): index of current token
     cfg: ModelConfig,
     *,
     cross: bool = False,
@@ -146,8 +146,11 @@ def apply_attn_decode(
     """One-token attention against (and update of) a KV cache.
 
     For self-attention the new token's K/V are written at slot ``pos % C``
-    (ring buffer when C == window).  Cross-attention caches are static
-    (pre-filled from the encoder/modal source) and not updated.
+    (ring buffer when C == window).  ``pos`` may be a scalar (gang-scheduled
+    decode: all rows share one position) or per-row ``(B,)`` (continuous
+    batching: each slot carries its own position, rope phase and validity
+    horizon).  Cross-attention caches are static (pre-filled from the
+    encoder/modal source) and not updated.
     """
     c = cache["k"].shape[1]
     if cross:
@@ -157,10 +160,11 @@ def apply_attn_decode(
         q = constrain(q, ("batch", None, None, None))
         y = attn_ops.decode_attention(q, cache["k"], cache["v"], jnp.asarray(c - 1, jnp.int32))
     else:
+        per_row = pos.ndim == 1
         q, k, v = _project_qkv(
             params, x, x, cfg, use_rope=True,
-            q_positions=pos[None] if pos.ndim == 0 else pos,
-            kv_positions=pos[None] if pos.ndim == 0 else pos,
+            q_positions=pos[:, None] if per_row else pos[None],
+            kv_positions=pos[:, None] if per_row else pos[None],
         )
         # decode: q is tiny — replicate heads over `model`; the KV cache is
         # sequence-sharded there, so attention runs as sharded partial
@@ -170,10 +174,17 @@ def apply_attn_decode(
         k = constrain(k, ("batch", None, None, None))
         v = constrain(v, ("batch", None, None, None))
         slot = (pos % c).astype(jnp.int32)
-        cache = dict(
-            k=jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1),
-            v=jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1),
-        )
+        if per_row:
+            rows = jnp.arange(x.shape[0])
+            cache = dict(
+                k=cache["k"].at[rows, slot].set(k[:, 0].astype(cache["k"].dtype)),
+                v=cache["v"].at[rows, slot].set(v[:, 0].astype(cache["v"].dtype)),
+            )
+        else:
+            cache = dict(
+                k=jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1),
+                v=jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1),
+            )
         y = attn_ops.decode_attention(q, cache["k"], cache["v"], pos, window=cfg.window)
     y = jnp.einsum("bshe,hed->bsd", y, params["wo"])
     if "bo" in params:

@@ -26,7 +26,7 @@ from .transformer import (block_specs, decode_stack, forward_stack,
 
 __all__ = [
     "param_specs", "init_params", "forward", "loss_fn", "logits_fn",
-    "cache_specs", "prefill", "decode_step",
+    "cache_specs", "init_cache", "prefill", "decode_step", "merge_slot",
 ]
 
 MOE_AUX_WEIGHT = 0.01
@@ -191,6 +191,33 @@ def init_cache(cfg: ModelConfig, batch: int, context: int, enc_len: Optional[int
                         specs, is_leaf=_is_p)
 
 
+def cache_batch_axes(cfg: ModelConfig, batch: int, context: int,
+                     enc_len: Optional[int] = None) -> Any:
+    """Per-leaf index of the batch axis in the stacked cache tree.
+
+    Stacking puts one (vlm: two) leading ``layers`` axes ahead of the leaf's
+    own ``batch`` axis, so the slot dimension is not a fixed position — it is
+    read off each leaf's logical axis names.
+    """
+    specs = cache_specs(cfg, batch, context, enc_len)
+    return jax.tree.map(lambda p: p.logical.index("batch"), specs, is_leaf=_is_p)
+
+
+def merge_slot(big: Any, small: Any, slot: jax.Array, batch_axes: Any) -> Any:
+    """Scatter a batch-1 decode state into row ``slot`` of a batched state.
+
+    The continuous-batching admission primitive: a freshly prefilled
+    request's caches (leading batch 1) overwrite exactly one slot of the
+    server's batched caches; every other slot's state is untouched, so live
+    sequences keep decoding across the write.  ``slot`` is traced — one
+    compiled merge serves every slot index.
+    """
+    return jax.tree.map(
+        lambda b, s, ax: jax.lax.dynamic_update_slice_in_dim(
+            b, s.astype(b.dtype), slot, axis=ax),
+        big, small, batch_axes)
+
+
 def prefill(
     params: Dict[str, Any],
     cfg: ModelConfig,
@@ -220,9 +247,16 @@ def decode_step(
     cfg: ModelConfig,
     token: jax.Array,                       # (B,) int32 — token at position `pos`
     caches: Any,
-    pos: jax.Array,                         # scalar int32
+    pos: jax.Array,                         # scalar int32, or (B,) per-slot positions
 ) -> Tuple[jax.Array, Any]:
-    """One decode step: consumes `token`, returns (next-token logits (B,V), caches)."""
+    """One decode step: consumes `token`, returns (next-token logits (B,V), caches).
+
+    ``pos`` may be per-slot ``(B,)``: every batch row advances at its own
+    sequence position (rope phase, cache write slot and attention validity
+    all follow the row's position) — the decode-state contract the
+    continuous-batching server relies on.  Rows are independent for every
+    family except MoE, where expert capacity couples tokens across the batch.
+    """
     kind = {"encdec": "decoder"}.get(cfg.family, cfg.family)
     x = _embed(params, token[:, None], cfg)
     h, caches = decode_stack(_stack_args(params, cfg), x, caches, pos, cfg, kind=kind)

@@ -19,8 +19,9 @@
 #                                        coverage lane; needs pytest-cov)
 #        bash test.sh --bench-smoke      quick perf-harness sanity: runs
 #                                        benchmarks/optimizer_throughput.py --quick,
-#                                        benchmarks/configstore_roundtrip.py --quick
-#                                        and benchmarks/compile_cold_warm.py --quick
+#                                        benchmarks/configstore_roundtrip.py --quick,
+#                                        benchmarks/compile_cold_warm.py --quick
+#                                        and benchmarks/serve_scenarios.py --quick
 #                                        and asserts each wrote valid JSON
 #                                        (benchmarks/check_bench.py), so the
 #                                        tracked perf trajectory can't rot silently.
@@ -55,6 +56,10 @@ if [[ "${1:-}" == "--bench-smoke" ]]; then
   # and the xla_runtime winner must promote + resolve through the store.
   python benchmarks/compile_cold_warm.py --quick
   python -m benchmarks.check_bench compile_cold_warm --expect-quick
+  # Continuous-vs-gang serving A/B over seeded traffic mixes: the heavy-tail
+  # scenario must yield a stats.compare verdict of `improved` on tokens/s.
+  python -m benchmarks.serve_scenarios --quick
+  python -m benchmarks.check_bench serve_scenarios --expect-quick
   exit 0
 fi
 
