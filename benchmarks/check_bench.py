@@ -114,6 +114,32 @@ def check_multi_instance(expect_quick: Optional[bool] = None) -> None:
             f"baseline {row['baseline_best']}")
 
 
+def check_online_tuning(expect_quick: Optional[bool] = None) -> None:
+    d = _load("online_tuning", expect_quick)
+    a = d["adapt"]
+    # adaptation really happened: at least one canary won and promoted
+    assert a["promotions"] >= 1, f"no canary promoted: {a}"
+    kinds = a["transitions"]
+    assert "canary_start" in kinds and "canary_verdict" in kinds, kinds
+    assert "promote" in kinds, kinds
+    # every canary that started was closed out by a verdict — except at most
+    # ONE still in flight when the adapt loop stopped (a live controller is
+    # snapshotted mid-canary; resume rolls such an orphan back), and an open
+    # canary can only be the journal's trailing record
+    open_canaries = kinds.count("canary_start") - kinds.count("canary_verdict")
+    assert open_canaries in (0, 1), kinds
+    if open_canaries:
+        assert kinds[-1] == "canary_start", kinds
+    # rollback symmetry: one rollback row per regressed/vetoed canary
+    assert kinds.count("rollback") == a["rollbacks"], (kinds, a)
+    assert len(d["frozen_tokens_per_s"]) >= 2, d["frozen_tokens_per_s"]
+    assert all(s > 0 for s in d["frozen_tokens_per_s"] + d["tuned_tokens_per_s"]), d
+    v = d["verdict"]
+    assert v["verdict"] == "improved", (
+        f"online tuning did not recover the traffic-mix shift: {v}")
+    assert v["candidate_location"] > v["baseline_location"], v
+
+
 CHECKS = {
     "optimizer_throughput": check_optimizer_throughput,
     "configstore_resolve": check_configstore_resolve,
@@ -122,6 +148,7 @@ CHECKS = {
     "campaign_sweep": check_campaign_sweep,
     "compile_cold_warm": check_compile_cold_warm,
     "serve_scenarios": check_serve_scenarios,
+    "online_tuning": check_online_tuning,
 }
 
 

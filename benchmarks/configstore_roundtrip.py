@@ -26,7 +26,7 @@ from typing import Any, Dict
 import jax
 import jax.numpy as jnp
 
-from repro.core import TuningSession, drive_session, promote_session_report
+from repro.core import drive_session, make_session, promote_session_report
 from repro.core import configstore
 from repro.core.registry import get_component
 from repro.core.tunable import Categorical, TunableSpace
@@ -85,10 +85,9 @@ def run(budget: int = 8, lookups: int = 20000, seed: int = 17) -> Dict[str, Any]
     for i, (name, shape) in enumerate(CONTEXT_SHAPES.items()):
         wl = attn_ops.workload_signature(shape["b"], shape["s"], shape["s"], shape["d"])
         workloads[name] = wl
-        session = TuningSession.for_component(
-            meta, objective="time_us", workload=wl, optimizer="rs",
-            budget=budget, seed=seed + i)
-        session.space_json = _tuned_space(meta).to_json()
+        session = make_session(
+            meta, "time_us", workload=wl, space=_tuned_space(meta),
+            optimizer="rs", budget=budget, seed=seed + i)
         core = drive_session(session, lambda s, shape=shape: _measure(shape, s))
         report = json.loads(core.session_report().decode())
         assert promote_session_report(store, report), "promotion must succeed (no RPI gate here)"

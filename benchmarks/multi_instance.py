@@ -24,7 +24,7 @@ from pathlib import Path
 from typing import Any, Dict
 
 from repro.core import (AgentClient, AgentProcess, MlosChannel, TrackedInstance,
-                        TuningSession, drive_session, pack_telemetry)
+                        drive_session, make_session, pack_telemetry)
 from repro.core.registry import get_component
 from repro.core.smartcomponents import TunableHashTable, hashtable_workload
 
@@ -46,8 +46,8 @@ def _measure(table: TunableHashTable, iid: int) -> Dict[str, float]:
 def _sessions(budget: int = BUDGET, seed: int = 100):
     meta = get_component("hashtable")
     return [
-        TuningSession.for_component(
-            meta, objective="collisions", optimizer=OPTIMIZER,
+        make_session(
+            meta, "collisions", optimizer=OPTIMIZER,
             budget=budget, seed=seed + iid, instance_id=iid,
         )
         for iid in INSTANCES

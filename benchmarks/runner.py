@@ -78,6 +78,12 @@ def _serve_scenarios(quick: bool, seed: int) -> List[BenchRecord]:
     return m.bench(quick=quick, seed=seed)
 
 
+@register("online_tuning")
+def _online_tuning(quick: bool, seed: int) -> List[BenchRecord]:
+    from . import online_tuning as m
+    return m.bench(quick=quick, seed=seed)
+
+
 # Post-run smoke assertions (shared with test.sh --bench-smoke and CI):
 # benchmark name -> check_bench check name.
 SMOKE_CHECKS = {
@@ -88,6 +94,7 @@ SMOKE_CHECKS = {
     "campaign_sweep": "campaign_sweep",
     "compile_cold_warm": "compile_cold_warm",
     "serve_scenarios": "serve_scenarios",
+    "online_tuning": "online_tuning",
 }
 
 

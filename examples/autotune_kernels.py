@@ -12,7 +12,7 @@ applies them to the registered component via its generated hooks.
 import jax
 import jax.numpy as jnp
 
-from repro.core import AgentClient, AgentProcess, MlosChannel, TelemetryEmitter, TuningSession
+from repro.core import AgentClient, AgentProcess, MlosChannel, TelemetryEmitter, make_session
 from repro.core.registry import get_component
 from repro.kernels.flash_attention import ops as attn_ops
 from repro.launch.microbench import jit_candidate, median_time_us
@@ -41,8 +41,7 @@ def measure(settings) -> float:
 
 def main() -> None:
     meta = get_component("flash_attention")
-    session = TuningSession.for_component(meta, objective="time_us",
-                                          optimizer="bo_matern32", budget=BUDGET)
+    session = make_session(meta, "time_us", optimizer="bo_matern32", budget=BUDGET)
     channel = MlosChannel.create()
     agent = AgentProcess(channel, session).start()
     client = AgentClient(channel)

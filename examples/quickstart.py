@@ -10,7 +10,7 @@ loop as the "system".
 """
 
 from repro.configs import get_config
-from repro.core import AgentCore, TuningSession
+from repro.core import AgentCore, make_session
 from repro.core.tracking import Tracker
 from repro.core.tunable import Float, TunableSpace
 from repro.runtime.steps import TrainHyper
@@ -25,8 +25,8 @@ def main() -> None:
     # quickstart the agent core runs in-process (examples/autotune_kernels.py
     # shows the full separate-process + shared-memory-channel deployment).
     space = TunableSpace([Float("lr_scale", 1.0, 0.25, 4.0, log=True)])
-    session = TuningSession.direct("train_loop", space, objective="loss",
-                                   optimizer="bo_matern32", budget=50)
+    session = make_session("train_loop", "loss", space=space, packed=False,
+                           optimizer="bo_matern32", budget=50)
     agent = AgentCore(session)
 
     current = {"lr_scale": 1.0}

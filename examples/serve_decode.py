@@ -11,7 +11,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import AgentCore, TuningSession
+from repro.core import AgentCore, make_session
 from repro.core.tunable import Int, TunableSpace
 from repro.models import model as M
 from repro.runtime.serve_loop import BatchedServer, serve_settings
@@ -29,8 +29,8 @@ def main() -> None:
     rng = np.random.default_rng(0)
 
     space = TunableSpace([Int("max_batch", 4, 1, 16, log=True)])
-    session = TuningSession.direct("serve_batching", space, objective="tokens_per_s",
-                                   mode="max", optimizer="bo_matern32", budget=6)
+    session = make_session("serve_batching", "tokens_per_s", space=space, packed=False,
+                           mode="max", optimizer="bo_matern32", budget=6)
     agent = AgentCore(session)
     cfg_now = agent.ask()
 

@@ -170,7 +170,8 @@ class SingletonSettings(Rule):
     name = "singleton-settings"
 
     SCOPE = ("src", "benchmarks", "examples")
-    EXEMPT = ("src/repro/core/configstore.py", "src/repro/core/registry.py")
+    EXEMPT = ("src/repro/core/configstore.py", "src/repro/core/registry.py",
+              "src/repro/core/config.py")
     _CONFIG_NAME = re.compile(r"(^|_)(settings|config)$")
 
     def check(self, mod: ParsedModule, index: RepoIndex) -> List[Finding]:
@@ -701,7 +702,8 @@ class TunablesContract(Rule):
 # =============================================================================
 # MLOS007 — journal-append-only
 # =============================================================================
-_JOURNAL_MARKERS = ("results/campaign", "results/bench/trajectory", "trajectory.jsonl")
+_JOURNAL_MARKERS = ("results/campaign", "results/bench/trajectory", "trajectory.jsonl",
+                    "results/online")
 
 
 class JournalAppendOnly(Rule):

@@ -15,8 +15,9 @@ Layers (paper §2.1):
   optimizers        — RandomSearch / Grid / One-at-a-time / GP-BO (Matern-3/2)
   smartcomponents   — paper-faithful demo components (hashtable, spinlock)
 """
+from . import config
 from .agent import (AgentClient, AgentCore, AgentMux, AgentProcess, TrackedInstance,
-                    TuningSession, drive_session, promote_session_report)
+                    TuningSession, drive_session, make_session, promote_session_report)
 from .baseline import BaselineStore, BenchRecord, GateReport
 from .campaign import Campaign, CampaignCell, CampaignJournal, CellResult, evals_to_reach
 from .channel import MlosChannel, ShmRing
@@ -24,7 +25,7 @@ from .codegen import generate_source, load_generated, pack_telemetry, unpack_tel
 from .configstore import ConfigStore, Context, context_for, default_store, resolve_settings
 from .registry import MetricSpec, all_components, get_component, tunable_component
 from .rpi import RPI, Bound, RpiReport, assert_rpi
-from .stats import (Comparison, Measurement, bootstrap_ci, compare,
+from .stats import (Comparison, Measurement, StreamingAB, bootstrap_ci, compare,
                     measure_adaptive, measure_interleaved)
 from .telemetry import Stopwatch, TelemetryEmitter, collective_bytes, hlo_counters, os_counters
 from .tracking import Tracker
@@ -32,13 +33,14 @@ from .tunable import Bool, Categorical, Float, Int, Tunable, TunableSpace
 
 __all__ = [
     "AgentClient", "AgentCore", "AgentMux", "AgentProcess", "TrackedInstance",
-    "TuningSession", "drive_session", "promote_session_report",
+    "TuningSession", "drive_session", "make_session", "promote_session_report",
     "Campaign", "CampaignCell", "CampaignJournal", "CellResult", "evals_to_reach",
     "MlosChannel", "ShmRing",
+    "config",
     "generate_source", "load_generated", "pack_telemetry", "unpack_telemetry",
     "ConfigStore", "Context", "context_for", "default_store", "resolve_settings",
     "BaselineStore", "BenchRecord", "GateReport",
-    "Comparison", "Measurement", "bootstrap_ci", "compare",
+    "Comparison", "Measurement", "StreamingAB", "bootstrap_ci", "compare",
     "measure_adaptive", "measure_interleaved",
     "MetricSpec", "all_components", "get_component", "tunable_component",
     "RPI", "Bound", "RpiReport", "assert_rpi",

@@ -50,8 +50,8 @@ from .optimizers import make_optimizer, optimizer_defaults, set_optimizer_defaul
 from .registry import ComponentMeta
 from .tunable import TunableSpace
 
-__all__ = ["TuningSession", "AgentCore", "AgentMux", "AgentProcess", "AgentClient",
-           "TrackedInstance", "drive_session", "promote_session_report"]
+__all__ = ["TuningSession", "make_session", "AgentCore", "AgentMux", "AgentProcess",
+           "AgentClient", "TrackedInstance", "drive_session", "promote_session_report"]
 
 _CONTROL_STOP = b"\x00STOP"
 _HEADER = struct.Struct("<II")  # (component_id, instance_id) telemetry prefix
@@ -94,20 +94,8 @@ class TuningSession:
     @classmethod
     def for_component(cls, meta: ComponentMeta, objective: str,
                       workload: Optional[str] = None, **kw: Any) -> "TuningSession":
-        fmt = "<II" + "".join(m.fmt for m in meta.metrics)
-        if workload is not None and "context" not in kw:
-            from .configstore import context_for
-
-            kw["context"] = context_for(meta.name, workload).to_dict()
-        return cls(
-            component=meta.name,
-            component_id=meta.component_id,
-            metric_fmt=fmt,
-            metric_names=[m.name for m in meta.metrics],
-            space_json=meta.space.to_json(),
-            objective=objective,
-            **kw,
-        )
+        """Legacy shim — prefer :func:`make_session` (the one factory)."""
+        return make_session(meta, objective, workload=workload, **kw)
 
     def to_json(self) -> str:
         return json.dumps(dataclasses.asdict(self))
@@ -118,10 +106,82 @@ class TuningSession:
 
     @classmethod
     def direct(cls, name: str, space: "TunableSpace", objective: str, **kw: Any) -> "TuningSession":
-        """Session for in-process tuning (no channel / packed telemetry):
-        used with :meth:`AgentCore.observe_value`."""
-        return cls(component=name, component_id=0, metric_fmt="", metric_names=[objective],
-                   space_json=space.to_json(), objective=objective, **kw)
+        """Legacy shim — prefer :func:`make_session` (the one factory)."""
+        return make_session(name, objective, space=space, packed=False,
+                            workload=kw.pop("workload", None), **kw)
+
+
+def make_session(component: Union[str, ComponentMeta], objective: str, *,
+                 workload: Optional[str] = "*",
+                 space: Optional[TunableSpace] = None,
+                 mode: str = "min",
+                 optimizer: str = "bo",
+                 budget: int = 50,
+                 samples_per_config: int = 1,
+                 seed: int = 0,
+                 instance_id: int = 0,
+                 context: Optional[Dict[str, str]] = None,
+                 prior: Optional[List[Dict[str, Any]]] = None,
+                 packed: Optional[bool] = None) -> TuningSession:
+    """THE session-construction entry point — every tuning path builds its
+    :class:`TuningSession` here (campaign cells, the online serve controller,
+    examples, ad-hoc driver loops), so every session carries a consistent
+    config-store context and the promote path (``promote_session_report``)
+    always knows where the result lands.
+
+    ``component`` is a registered component name (or its :class:`ComponentMeta`):
+    the session speaks the component's packed telemetry schema and searches its
+    declared tunable space — or a ``space`` subset/override of it, which is how
+    the online controller restricts search to hot-swappable knobs while still
+    demuxing the full telemetry stream.  An *unregistered* name plus an explicit
+    ``space`` builds a direct session (no packed telemetry; drive it with
+    :meth:`AgentCore.observe_value`).
+
+    The session is context-tagged with ``context_for(component, workload)``
+    unless an explicit ``context`` is given; ``workload`` defaults to the
+    component-wide ``"*"`` signature.  ``workload=None`` leaves the session
+    untagged (legacy escape hatch — its reports cannot be auto-promoted).
+
+    ``packed`` overrides telemetry-schema selection: ``None`` (default) infers
+    from registration, ``False`` forces a direct session even for a registered
+    name (requires ``space``).
+    """
+    meta: Optional[ComponentMeta]
+    if isinstance(component, ComponentMeta):
+        meta = component
+    else:
+        from .registry import _REGISTRY
+
+        meta = _REGISTRY.get(str(component))
+    if packed is False:
+        meta = None
+    elif packed and meta is None:
+        raise ValueError(f"{component!r} is not a registered component: "
+                         "packed telemetry needs a declared metric schema")
+    if meta is not None:
+        fmt = "<II" + "".join(m.fmt for m in meta.metrics)
+        names = [m.name for m in meta.metrics]
+        name, cid = meta.name, meta.component_id
+        sp = space if space is not None else meta.space
+        if objective not in names:
+            raise ValueError(f"{name}: objective {objective!r} is not a declared "
+                             f"metric {names}")
+    else:
+        if space is None:
+            raise ValueError(f"{component!r} is not a registered component: "
+                             "pass an explicit `space` to build a direct session")
+        fmt, names = "", [objective]
+        name, cid = str(component), 0
+        sp = space
+    if context is None and workload is not None:
+        from .configstore import context_for
+
+        context = context_for(name, workload).to_dict()
+    return TuningSession(
+        component=name, component_id=cid, metric_fmt=fmt, metric_names=names,
+        space_json=sp.to_json(), objective=objective, instance_id=instance_id,
+        mode=mode, optimizer=optimizer, samples_per_config=samples_per_config,
+        budget=budget, seed=seed, context=context, prior=prior)
 
 
 def sessions_to_json(sessions: Iterable[TuningSession]) -> str:
@@ -502,7 +562,10 @@ def drive_session(session: TuningSession, measure: Any) -> AgentCore:
 
 
 def promote_session_report(store: Any, msg: Dict[str, Any], *,
-                           rpi: Any = None, run: Any = None) -> bool:
+                           rpi: Any = None, run: Any = None,
+                           baseline: Optional[Sequence[float]] = None,
+                           samples: Optional[Sequence[float]] = None,
+                           tolerance: float = 0.05, alpha: float = 0.05) -> bool:
     """Persist a finished session's best config into the config store.
 
     This is the producer half of the paper's tune → validate → persist →
@@ -511,7 +574,16 @@ def promote_session_report(store: Any, msg: Dict[str, Any], *,
     (run id, budget, best objective, evaluations) rides along — logged into
     the tracked ``run`` as well, so the experiment store can answer "where
     did this config come from".  Returns False when the report carries no
-    context or the RPI check rejects it.
+    context or a gate rejects it.
+
+    ``baseline``/``samples`` thread LIVE measurement evidence into the
+    store's stats gate (``ConfigStore.promote``): the online serve controller
+    passes the champion's live window samples as ``baseline`` and the
+    challenger's as ``samples``, so a canary promotes against what the
+    incumbent actually did on the same traffic — not against a stale recorded
+    number.  The report's ``mode`` orients the comparison.  Extra provenance
+    in ``msg["provenance"]`` (canary id, window count, source) rides into the
+    stored entry.
     """
     from .configstore import Context
 
@@ -535,9 +607,13 @@ def promote_session_report(store: Any, msg: Dict[str, Any], *,
         "evaluations": msg.get("evaluations"),
         "objective": objective,
         "best_objective": best_objective,
+        **(msg.get("provenance") or {}),
     }
     ok = store.promote(ctx, msg["best_config"], rpi=rpi, metrics=metrics,
-                       provenance=provenance)
+                       baseline=list(baseline) if baseline else None,
+                       samples=list(samples) if samples else None,
+                       mode=msg.get("mode", "min"), tolerance=tolerance,
+                       alpha=alpha, provenance=provenance)
     if run is not None:
         run.log_metric(f"{ctx.component}@{ctx.workload}/{objective}", best_objective)
         run.set_tags({f"{ctx.component}@{ctx.workload}":

@@ -46,7 +46,7 @@ import time
 from pathlib import Path
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
-from .agent import AgentMux, TuningSession
+from .agent import AgentMux, TuningSession, make_session
 from .codegen import pack_telemetry
 from .configstore import ConfigStore, Context, context_for, default_store
 from .registry import get_component
@@ -303,8 +303,8 @@ class Campaign:
             next_iid[cell.component] = iid + 1
             prior, info = self._prior_for(cell)
             warm[cell.cell_id] = info
-            session = TuningSession.for_component(
-                meta, objective=cell.objective, workload=cell.workload,
+            session = make_session(
+                meta, cell.objective, workload=cell.workload,
                 mode=cell.mode, optimizer=cell.optimizer, budget=cell.budget,
                 samples_per_config=cell.samples_per_config, seed=cell.seed,
                 instance_id=iid, prior=prior)

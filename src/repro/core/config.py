@@ -1,0 +1,118 @@
+"""One config-resolution facade — THE public API for reading and writing
+tuned settings.
+
+Four entry points accreted as the repo grew: the module-global ``settings``
+dict on each component singleton, per-instance/module ``settings_for``,
+agent-driven ``apply_settings``, and raw :class:`~repro.core.configstore.ConfigStore`
+lookups.  Callers picked whichever was closest, which meant four subtly
+different answers to "what settings is this component running?".  This module
+collapses them behind one surface:
+
+  * :func:`resolve` — the one read path.  Full tier resolution (in-process
+    override ≻ explicit live settings ≻ persisted tuned entry ≻ declared
+    defaults) for any registered component, keyed by workload (and optionally
+    explicit hardware/software coordinates).
+  * :func:`override` / :func:`clear_override` — the one ephemeral write path
+    (the operator's hand on the dial for one process; never persists).
+  * :func:`promote` — the one durable write path, delegating to the store's
+    validated/gated promotion.
+  * :func:`apply_global` / :func:`global_settings` — the *legacy* module-global
+    ``settings`` dict tier.  Both emit :class:`DeprecationWarning`: the global
+    tier is workload-blind and process-local, exactly the one-size-fits-all
+    tuning the store exists to replace.  New code uses ``override``/``promote``
+    with an explicit workload.
+
+This file is part of the resolution machinery itself (same class as
+``configstore.py``/``registry.py``), so it is exempt from mloslint MLOS002 —
+everything *outside* this tier goes through :func:`resolve`.
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Any, Dict
+
+from .configstore import WILDCARD, Context, context_for, default_store
+from .registry import default_instance, get_component
+from .registry import settings_for as _settings_for_context
+
+__all__ = [
+    "resolve", "override", "clear_override", "promote",
+    "apply_global", "global_settings",
+]
+
+_DEPRECATION = (
+    "the module-global `settings` dict tier is deprecated: it is workload-blind "
+    "and process-local.  Use repro.core.config.override(component, workload, ...) "
+    "for one-process dials or repro.core.config.promote(...) for durable tuned "
+    "entries, and read through repro.core.config.resolve(component, workload=...)."
+)
+
+
+def resolve(component: str, workload: str = WILDCARD, *,
+            hardware: str = WILDCARD, sw: str = WILDCARD) -> Dict[str, Any]:
+    """Resolve the effective settings dict for ``component`` @ ``workload``.
+
+    The single public read path.  Honors every tier, strongest first:
+    in-process override (:func:`override`) → keys explicitly set on the live
+    singleton this process → persisted tuned entry (exact context → relaxed
+    hw/sw → component-wide ``"*"`` workload) → the component's live defaults.
+    Wildcard ``hardware``/``sw`` mean "this process's fingerprints".  Returns
+    a fresh dict — mutating it never leaks into later resolutions.
+
+    Raises ``KeyError`` for an unregistered component.
+    """
+    s = _settings_for_context(Context(component, workload, hardware, sw))
+    return dict(s)
+
+
+def override(component: str, workload: str, settings: Dict[str, Any]) -> None:
+    """Pin ``settings`` for ``component`` @ ``workload`` in this process.
+
+    The in-process tier: outranks everything, persists nothing.  Values are
+    validated against the component's declared tunable space up front so a
+    typo'd key or out-of-domain value fails here, not inside a jit trace.
+    """
+    meta = get_component(component)
+    unknown = [k for k in settings if k not in meta.space]
+    if unknown:
+        raise KeyError(f"{component}: unknown tunable(s) {unknown}")
+    validated = {k: meta.space[k].validate(v) for k, v in settings.items()}
+    default_store().set_override(component, workload, validated)
+
+
+def clear_override(component: str, workload: str = WILDCARD) -> None:
+    """Drop this process's override for ``component`` @ ``workload``."""
+    default_store().clear_override(component, workload)
+
+
+def promote(component: str, settings: Dict[str, Any], workload: str = WILDCARD,
+            **gate: Any) -> bool:
+    """Durably promote ``settings`` through the store's validated write path.
+
+    Thin sugar over ``default_store().promote(context_for(component, workload),
+    ...)`` — same RPI-envelope and stats-gate keywords (``rpi``, ``metrics``,
+    ``baseline``, ``samples``, ``mode``, ``tolerance``, ``alpha``,
+    ``provenance``).  Returns True iff the entry was accepted.
+    """
+    return default_store().promote(context_for(component, workload), settings, **gate)
+
+
+def apply_global(component: str, settings: Dict[str, Any]) -> None:
+    """DEPRECATED: mutate the component's module-global settings tier.
+
+    Kept so operator tooling (``launch/tuning.py`` plain ``comp.key=value``
+    overrides) still works during migration; warns on every use.
+    """
+    warnings.warn(_DEPRECATION, DeprecationWarning, stacklevel=2)
+    inst = default_instance(component)
+    if inst is None:
+        raise KeyError(f"{component}: no live instance to apply global settings to")
+    inst.apply_settings(settings)
+
+
+def global_settings(component: str) -> Dict[str, Any]:
+    """DEPRECATED: read the raw module-global settings dict (workload-blind)."""
+    warnings.warn(_DEPRECATION, DeprecationWarning, stacklevel=2)
+    inst = default_instance(component)
+    s = inst.settings if inst is not None else get_component(component).space.defaults()
+    return dict(s)

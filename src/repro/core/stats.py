@@ -37,7 +37,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 __all__ = [
-    "Measurement", "Comparison",
+    "Measurement", "Comparison", "StreamingAB",
     "median", "mad", "trimmed_mean", "bootstrap_ci",
     "measure_adaptive", "measure_interleaved", "compare",
 ]
@@ -250,3 +250,67 @@ def compare(baseline: Sequence[float], candidate: Sequence[float], *,
                       significant=significant, baseline_location=loc_a,
                       candidate_location=loc_b, baseline_n=int(a.size),
                       candidate_n=int(b.size), alpha=alpha, min_effect=min_effect)
+
+
+class StreamingAB:
+    """Sequential interleaved A/B verdict over *streaming* measurement windows.
+
+    The online-tuning shape of :func:`measure_interleaved` + :func:`compare`:
+    samples arrive one interleaved (baseline, candidate) pair at a time — e.g.
+    alternating champion/challenger serve windows — and the caller wants a
+    decision as early as the evidence allows.  :meth:`add_pair` accumulates a
+    pair and returns the verdict over everything seen so far; :attr:`decided`
+    goes True when the canary can stop:
+
+      * ``regressed`` decides IMMEDIATELY — rollback is cheap and safe, so one
+        clear regression window is enough to pull a canary (fail-fast).  With
+        a single pair :func:`compare` falls back to effect size only, which is
+        exactly the conservative reading we want.
+      * ``improved`` needs at least ``min_pairs`` pairs — promotion is durable,
+        so it must not ride on a lucky window.
+      * ``max_pairs`` caps the canary: once reached, whatever :meth:`verdict`
+        says is final (typically ``noise`` → keep the champion).
+
+    Deterministic under ``seed`` like everything else in this module.
+    """
+
+    def __init__(self, *, mode: str = "max", alpha: float = 0.05,
+                 min_effect: float = 0.05, min_pairs: int = 3,
+                 max_pairs: int = 8, seed: int = 0):
+        if min_pairs < 1 or max_pairs < min_pairs:
+            raise ValueError(f"bad pair bounds: min={min_pairs} max={max_pairs}")
+        self.mode = mode
+        self.alpha = alpha
+        self.min_effect = min_effect
+        self.min_pairs = min_pairs
+        self.max_pairs = max_pairs
+        self.seed = seed
+        self.baseline: List[float] = []
+        self.candidate: List[float] = []
+
+    @property
+    def pairs(self) -> int:
+        return len(self.candidate)
+
+    def add_pair(self, baseline_sample: float, candidate_sample: float) -> Comparison:
+        """Accumulate one interleaved window pair; return the running verdict."""
+        self.baseline.append(float(baseline_sample))
+        self.candidate.append(float(candidate_sample))
+        return self.verdict()
+
+    def verdict(self) -> Comparison:
+        if not self.candidate:
+            raise ValueError("StreamingAB verdict before any pair was added")
+        return compare(self.baseline, self.candidate, alpha=self.alpha,
+                       min_effect=self.min_effect, mode=self.mode, seed=self.seed)
+
+    @property
+    def decided(self) -> bool:
+        if not self.candidate:
+            return False
+        if self.pairs >= self.max_pairs:
+            return True
+        v = self.verdict().verdict
+        if v == "regressed":
+            return True
+        return v == "improved" and self.pairs >= self.min_pairs

@@ -25,7 +25,7 @@ from __future__ import annotations
 
 from typing import Any, Dict, Tuple
 
-from ..core import configstore
+from ..core import config, configstore
 from ..core.compilecache import XLA_RUNTIME_SPACE, resolve_xla_settings, set_xla_override
 from ..core.optimizers import optimizer_defaults, set_optimizer_defaults
 from ..core.registry import get_component
@@ -123,7 +123,10 @@ def apply_overrides(overrides: Dict[str, Dict[str, Any]]) -> None:
             # compilecache.child_env(); never written into this process's env.
             set_xla_override(XLA_RUNTIME_SPACE.subset(list(kv)).validate(kv))
             continue
-        SINGLETONS[comp].apply_settings(kv)
+        # Plain 'comp.key=v' hits the deprecated module-global tier through
+        # the facade, which owns the DeprecationWarning steering operators
+        # toward 'comp@workload.key=v' (the override tier above).
+        config.apply_global(comp, kv)
 
 
 def current_settings(contexts: bool = True) -> Dict[str, Dict[str, Any]]:
@@ -137,8 +140,7 @@ def current_settings(contexts: bool = True) -> Dict[str, Dict[str, Any]]:
     out["xla_runtime"] = resolve_xla_settings()
     if contexts:
         for comp, workload in configstore.default_store().contexts():
-            inst = SINGLETONS.get(comp)
-            if inst is None or not workload or workload == configstore.WILDCARD:
+            if comp not in SINGLETONS or not workload or workload == configstore.WILDCARD:
                 continue
-            out[f"{comp}@{workload}"] = inst.settings_for(workload)
+            out[f"{comp}@{workload}"] = config.resolve(comp, workload)
     return out

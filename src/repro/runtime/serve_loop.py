@@ -54,7 +54,14 @@ from ..core.tunable import Int
 from ..models import model as M
 from ..models.config import ModelConfig
 
-__all__ = ["serve_settings", "ServeSettings", "BatchedServer", "workload_signature"]
+__all__ = ["serve_settings", "ServeSettings", "BatchedServer", "workload_signature",
+           "HOT_SWAP_KNOBS"]
+
+# Tunables swappable on a LIVE server at a sync boundary (see apply_config):
+# pure scheduling knobs that appear in no compiled shape and no jit context
+# key.  max_batch (and capacity) are baked into every compiled artifact at
+# __init__ — changing them means building a new server.
+HOT_SWAP_KNOBS = ("admission", "prefill_chunk", "sync_interval", "max_new_tokens")
 
 
 @tunable_component(
@@ -290,6 +297,38 @@ class BatchedServer:
         self._run_steps = 0
         self._run_syncs = 0
         self._run_t0 = time.perf_counter()
+        # windowed telemetry accounting: reset cleanly per run so the first
+        # window of a new run() never inherits the previous run's clock/state
+        self._win_tokens = 0
+        self._win_completed: List[_Request] = []
+        self._win_t0 = self._run_t0
+        self.last_window: Optional[Dict[str, float]] = None
+
+    # ------------------------------------------------------ live config swap
+    def current_config(self) -> Dict[str, int]:
+        """Snapshot of the scheduler knobs this server is running right now."""
+        return {"max_batch": self.max_batch, "max_new_tokens": self.max_new_tokens,
+                "admission": self.admission, "prefill_chunk": self.prefill_chunk,
+                "sync_interval": self.sync_interval}
+
+    def apply_config(self, settings: Dict[str, Any]) -> None:
+        """Hot-swap scheduler knobs on a live server.
+
+        Only :data:`HOT_SWAP_KNOBS` are accepted — pure scheduling knobs that
+        no compiled artifact depends on, so a swap between :meth:`step` calls
+        (i.e. at a sync boundary) can neither trigger a recompile nor perturb
+        any request's token stream: the scheduler stays a pure reordering
+        (bit-identity invariant) and :func:`_host_fetch` still runs exactly
+        once per ``sync_interval`` decode steps — the interval just changes
+        length.  Shape-baked knobs (``max_batch``) raise: changing them means
+        building a new server.
+        """
+        bad = [k for k in settings if k not in HOT_SWAP_KNOBS]
+        if bad:
+            raise ValueError(f"not hot-swappable on a live server: {bad} "
+                             f"(allowed: {list(HOT_SWAP_KNOBS)})")
+        for k, v in settings.items():
+            setattr(self, k, max(1, int(v)))
 
     def step(self) -> List[_Request]:
         """One scheduler step: admit into free slots, run ``sync_interval``
@@ -326,6 +365,7 @@ class BatchedServer:
             for t in range(toks_h.shape[0]):
                 tok = int(toks_h[t, slot])
                 r.tokens.append(tok)
+                self._win_tokens += 1
                 if tok == self.eos_id or len(r.tokens) >= r.eff_budget:
                     self._finish(r, now)
                     finished.append(r)
@@ -345,6 +385,7 @@ class BatchedServer:
         r.finished_at = now
         self.results[r.rid] = r
         self._run_completed.append(r)
+        self._win_completed.append(r)
         self._slot_req[r.slot] = None
         self._free.append(r.slot)
 
@@ -390,6 +431,7 @@ class BatchedServer:
             self._run_syncs += 1
             for i, r in enumerate(live):
                 r.tokens.append(int(t_host[i]))
+                self._win_tokens += 1
                 if r.tokens[-1] == self.eos_id or len(r.tokens) >= budgets[i]:
                     r.done = True
             for _ in range(max(budgets) - 1):
@@ -407,6 +449,7 @@ class BatchedServer:
                     if not r.done:
                         nxt = int(t_host[i])
                         r.tokens.append(nxt)
+                        self._win_tokens += 1
                         if nxt == self.eos_id or len(r.tokens) >= budgets[i]:
                             r.done = True
             now = time.perf_counter()
@@ -415,6 +458,7 @@ class BatchedServer:
                 r.finished_at = now
                 self.results[r.rid] = r
                 self._run_completed.append(r)
+                self._win_completed.append(r)
             self._emit_rolling()
 
     # -------------------------------------------------------------- metrics
@@ -434,14 +478,28 @@ class BatchedServer:
         }
 
     def _emit_rolling(self) -> None:
-        if self.emitter is None:
-            return
-        elapsed = max(time.perf_counter() - self._run_t0, 1e-9)
-        done_tokens = sum(len(r.tokens) for r in self._run_completed)
-        lat = [r.finished_at - r.submitted for r in self._run_completed]
-        self.emitter.emit({
-            "tokens_per_s": done_tokens / elapsed,
+        """Per-window telemetry at the sync boundary.
+
+        Rates (tokens/s, p50 latency) cover THIS window only — the tokens
+        appended and requests completed since the previous sync — so the
+        stream reacts to load/config changes within one interval instead of
+        being flattened by a run-cumulative average.  Gauges (queue depth,
+        live slots) are point-in-time reads AT the boundary, never averaged
+        across the window.  ``last_window`` keeps the most recent record for
+        in-process consumers (the online controller); the emitter, when
+        attached, streams the same record to the agent channel.
+        """
+        now = time.perf_counter()
+        lat = [r.finished_at - r.submitted for r in self._win_completed]
+        m = {
+            "tokens_per_s": self._win_tokens / max(now - self._win_t0, 1e-9),
             "p50_latency_s": float(np.median(lat)) if lat else 0.0,
             "queue_depth": float(len(self.queue)),
             "live_slots": float(self._n_live()),
-        })
+        }
+        self._win_tokens = 0
+        self._win_completed = []
+        self._win_t0 = now
+        self.last_window = m
+        if self.emitter is not None:
+            self.emitter.emit(m)

@@ -27,7 +27,8 @@ from typing import Callable, Dict, List
 
 import numpy as np
 
-__all__ = ["Arrival", "SCENARIOS", "diurnal", "bursts", "heavy_tail", "replay"]
+__all__ = ["Arrival", "SCENARIOS", "diurnal", "bursts", "heavy_tail", "drifting",
+           "replay"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,10 +92,41 @@ def heavy_tail(seed: int, n: int = 32, rate: float = 16.0, p_long: float = 0.2,
     return out
 
 
+def drifting(seed: int, n: int = 32, shift: float = 0.5, rate: float = 16.0,
+             short_budget: int = 3, long_budget: int = 40,
+             vocab: int = 250) -> List[Arrival]:
+    """Traffic-MIX shift: the online-tuning scenario.
+
+    Poisson arrivals whose output-budget regime flips mid-scenario: the first
+    ``shift`` fraction are long decode-heavy completions (where a long sync
+    interval amortizes the per-window host sync), the rest are short
+    chat-style turns of a couple of tokens — under a long sync interval a
+    slot that finishes early in the window burns the rest of it on wasted
+    decode steps, and freed slots cannot be backfilled until the next sync
+    boundary.  A config tuned for the first regime is structurally mistuned
+    for the second, so a frozen server loses throughput at the shift — the
+    gap online tuning must close.
+    """
+    rng = np.random.default_rng(seed)
+    times = _poisson_times(rng, n, rate)
+    k = int(np.clip(round(n * shift), 0, n))
+    out = []
+    for i, t in enumerate(times):
+        if i < k:
+            budget = int(rng.integers(max(2, 3 * long_budget // 4), long_budget + 1))
+            n_prompt = int(rng.integers(4, 13))
+        else:
+            budget = int(rng.integers(2, short_budget + 1))
+            n_prompt = int(rng.integers(3, 9))
+        out.append(Arrival(float(t), _prompt(rng, n_prompt, vocab), budget))
+    return out
+
+
 SCENARIOS: Dict[str, Callable[..., List[Arrival]]] = {
     "diurnal": diurnal,
     "bursts": bursts,
     "heavy_tail": heavy_tail,
+    "drifting": drifting,
 }
 
 

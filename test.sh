@@ -20,8 +20,9 @@
 #        bash test.sh --bench-smoke      quick perf-harness sanity: runs
 #                                        benchmarks/optimizer_throughput.py --quick,
 #                                        benchmarks/configstore_roundtrip.py --quick,
-#                                        benchmarks/compile_cold_warm.py --quick
-#                                        and benchmarks/serve_scenarios.py --quick
+#                                        benchmarks/compile_cold_warm.py --quick,
+#                                        benchmarks/serve_scenarios.py --quick
+#                                        and benchmarks/online_tuning.py --quick
 #                                        and asserts each wrote valid JSON
 #                                        (benchmarks/check_bench.py), so the
 #                                        tracked perf trajectory can't rot silently.
@@ -60,6 +61,11 @@ if [[ "${1:-}" == "--bench-smoke" ]]; then
   # scenario must yield a stats.compare verdict of `improved` on tokens/s.
   python -m benchmarks.serve_scenarios --quick
   python -m benchmarks.check_bench serve_scenarios --expect-quick
+  # Online shadow/canary tuning recovers a traffic-mix shift: at least one
+  # canary promotes through the store gate, and the online-tuned server must
+  # beat the frozen config on the post-shift mix (stats.compare `improved`).
+  python -m benchmarks.online_tuning --quick
+  python -m benchmarks.check_bench online_tuning --expect-quick
   exit 0
 fi
 

@@ -361,6 +361,22 @@ def test_mlos007_fires_on_truncating_journal_writes(tmp_path):
     assert sum(f.rule == "MLOS007" for f in findings) == 3
 
 
+def test_mlos007_fires_on_online_journal_rewrites(tmp_path):
+    # the online tuner's transition journal is under the same append-only
+    # contract as the campaign journal: resume-after-kill replays it
+    root = mini_repo(tmp_path, {
+        "src/repro/bad_online.py": """\
+            ROOT = "results/online"
+
+            def compact(tuner_id, rows):
+                with open(f"{ROOT}/{tuner_id}.jsonl", "w") as f:
+                    f.writelines(rows)
+            """,
+    })
+    findings, rules = rules_fired(root)
+    assert "MLOS007" in rules
+
+
 def test_mlos007_silent_on_append_only_twin(tmp_path):
     root = mini_repo(tmp_path, {
         "src/repro/good_journal.py": """\

@@ -1,0 +1,138 @@
+"""The unified config-resolution facade and the one session factory.
+
+Satellites of the online-tuning PR: ``repro.core.config`` is the single
+public way to resolve/override/promote component settings (the legacy
+module-global tier survives behind a ``DeprecationWarning``), and
+``repro.core.agent.make_session`` is the single way every tuning path builds
+its :class:`TuningSession` (campaigns, the online controller, examples; the
+old classmethods are thin shims over it).
+"""
+from __future__ import annotations
+
+import warnings
+
+import pytest
+
+from repro.core import config
+from repro.core import configstore
+from repro.core.agent import TuningSession, make_session
+from repro.core.configstore import ConfigStore
+from repro.core.registry import default_instance, get_component
+from repro.core.tunable import Float, TunableSpace
+
+import repro.runtime.serve_loop  # noqa: F401  (registers serve_batching)
+
+
+@pytest.fixture
+def store(tmp_path):
+    st = ConfigStore(root=str(tmp_path / "configstore"))
+    old = configstore.set_default_store(st)
+    yield st
+    configstore.set_default_store(old)
+
+
+# ----------------------------------------------------------------- resolve
+def test_resolve_returns_declared_defaults_when_nothing_tuned(store):
+    got = config.resolve("serve_batching", "no-such-workload")
+    assert got == get_component("serve_batching").space.defaults()
+
+
+def test_resolve_sees_promotions_and_overrides_in_tier_order(store):
+    base = config.resolve("serve_batching", "wlA")
+    assert config.promote("serve_batching", {**base, "sync_interval": 9},
+                          workload="wlA")
+    assert config.resolve("serve_batching", "wlA")["sync_interval"] == 9
+    # the in-process override tier outranks the stored entry
+    config.override("serve_batching", "wlA", {"sync_interval": 13})
+    assert config.resolve("serve_batching", "wlA")["sync_interval"] == 13
+    config.clear_override("serve_batching", "wlA")
+    assert config.resolve("serve_batching", "wlA")["sync_interval"] == 9
+    # other workloads are untouched
+    assert config.resolve("serve_batching", "wlB")["sync_interval"] == \
+        base["sync_interval"]
+
+
+def test_override_validates_against_the_declared_space(store):
+    with pytest.raises(KeyError):
+        config.override("serve_batching", "wlA", {"not_a_knob": 1})
+    # declared tunables are cast/clipped by their spec, not taken raw
+    config.override("serve_batching", "wlA", {"sync_interval": "7"})
+    assert config.resolve("serve_batching", "wlA")["sync_interval"] == 7
+    config.clear_override("serve_batching", "wlA")
+
+
+def test_unknown_component_raises(store):
+    with pytest.raises(KeyError):
+        config.resolve("no_such_component")
+
+
+# ------------------------------------------------- deprecated global tier
+def test_global_tier_warns_and_still_works(store):
+    inst = default_instance("serve_batching")
+    before = dict(inst.settings)
+    try:
+        with pytest.warns(DeprecationWarning):
+            config.apply_global("serve_batching", {"admission": 5})
+        assert inst.settings["admission"] == 5
+        with pytest.warns(DeprecationWarning):
+            assert config.global_settings("serve_batching")["admission"] == 5
+    finally:
+        inst.apply_settings(before)
+
+
+def test_resolve_does_not_warn(store):
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        config.resolve("serve_batching", "wlA")
+
+
+# ------------------------------------------------------------ make_session
+def test_make_session_packed_from_registered_component():
+    s = make_session("serve_batching", "tokens_per_s", workload="wl1",
+                     mode="max", optimizer="rs", budget=7, seed=3)
+    meta = get_component("serve_batching")
+    assert s.component == "serve_batching"
+    assert s.component_id == meta.component_id
+    assert s.metric_names == [m.name for m in meta.metrics]
+    assert s.metric_fmt  # packed: binary telemetry schema attached
+    assert s.objective == "tokens_per_s" and s.mode == "max"
+    # context is always tagged: same coordinates the config store keys on
+    assert s.context["component"] == "serve_batching"
+    assert s.context["workload"] == "wl1"
+    assert set(s.context) == {"component", "workload", "hardware", "sw"}
+
+
+def test_make_session_validates_objective_against_declared_metrics():
+    with pytest.raises(ValueError, match="objective"):
+        make_session("serve_batching", "no_such_metric")
+
+
+def test_make_session_direct_mode_needs_a_space():
+    space = TunableSpace([Float("lr", 0.1, 0.01, 1.0, log=True)])
+    s = make_session("train_loop", "loss", space=space, packed=False)
+    assert s.component == "train_loop" and s.component_id == 0
+    assert s.metric_fmt == "" and s.metric_names == ["loss"]
+    assert s.context["workload"] == "*"
+    with pytest.raises(ValueError, match="space"):
+        make_session("train_loop", "loss", packed=False)
+
+
+def test_make_session_workload_none_skips_context_tagging():
+    space = TunableSpace([Float("lr", 0.1, 0.01, 1.0)])
+    s = make_session("train_loop", "loss", space=space, packed=False,
+                     workload=None)
+    assert s.context is None
+
+
+def test_legacy_classmethod_shims_delegate_to_the_factory():
+    meta = get_component("serve_batching")
+    a = TuningSession.for_component(meta, objective="tokens_per_s",
+                                    workload="wl2", budget=4)
+    b = make_session(meta, "tokens_per_s", workload="wl2", budget=4)
+    assert a == b
+    space = TunableSpace([Float("lr", 0.1, 0.01, 1.0)])
+    c = TuningSession.direct("serve_batching", space, objective="tokens_per_s",
+                             budget=4)
+    # direct stays direct even for a registered name: no packed schema
+    assert c.metric_fmt == "" and c.component_id == 0
+    assert c.space_json == space.to_json()

@@ -239,3 +239,81 @@ def test_open_loop_replay_backdates_queueing_delay(served):
     m = traffic.replay(s, arr, speed=50.0)
     assert m["completed"] == 6
     assert all(r.finished_at > r.submitted for r in s.results.values())
+
+
+# ------------------------------------------------------------- hot swapping
+def test_hot_swap_mid_run_preserves_bit_identity(served):
+    """Online tuning's load-bearing precondition: re-knobbing the scheduler
+    at sync boundaries (the only points a controller can interpose) is still
+    a pure reordering — every token stream stays bit-identical to the
+    sequential gang reference no matter how the knobs thrash mid-run."""
+    prompts = _prompts(6, seed=9)
+    ref, _ = _serve(served, "gang", {"max_batch": 1}, prompts, budget=8)
+    params, cfg = served
+    s = BatchedServer(params, cfg, capacity=CAPACITY, eos_id=-1,
+                      mode="continuous",
+                      settings={"max_batch": 3, "admission": 2,
+                                "prefill_chunk": 16, "sync_interval": 2})
+    for p in prompts:
+        s.submit(p)
+    s.begin_run(8)
+    swaps = [{"sync_interval": 5}, {"admission": 1, "prefill_chunk": 8},
+             {"sync_interval": 1, "admission": 4, "max_new_tokens": 8}]
+    i = 0
+    while s.queue or s.live_slots:
+        s.apply_config(swaps[i % len(swaps)])
+        i += 1
+        s.step()
+    m = s.finish_run()
+    assert i >= 3, "run too short to exercise every swap"
+    assert _token_streams(s) == _token_streams(ref)
+    assert m["completed"] == 6
+
+
+def test_apply_config_rejects_shape_baked_knobs(served):
+    params, cfg = served
+    s = BatchedServer(params, cfg, capacity=CAPACITY, eos_id=-1,
+                      mode="continuous", settings={"max_batch": 2})
+    with pytest.raises(ValueError, match="max_batch"):
+        s.apply_config({"max_batch": 4})
+    with pytest.raises(ValueError, match="bogus"):
+        s.apply_config({"bogus": 1})
+    # the declared hot-swap surface all applies cleanly and reads back
+    s.apply_config({k: 3 for k in serve_loop.HOT_SWAP_KNOBS})
+    got = s.current_config()
+    assert all(got[k] == 3 for k in serve_loop.HOT_SWAP_KNOBS)
+    assert got["max_batch"] == 2  # untouched
+
+
+def test_rolling_telemetry_is_windowed_and_resets_between_runs(served):
+    """Rolling records cover ONE window each — rates over the window, gauges
+    point-in-time at the sync boundary — and every run starts from a clean
+    window state (no leakage from the previous run's totals)."""
+    params, cfg = served
+    s = BatchedServer(params, cfg, capacity=CAPACITY, eos_id=-1,
+                      mode="continuous",
+                      settings={"max_batch": 2, "admission": 1,
+                                "prefill_chunk": 8, "sync_interval": 2})
+    for p in _prompts(4, seed=11):
+        s.submit(p)
+    s.begin_run(6)
+    assert s.last_window is None  # nothing measured yet this run
+    s.step()
+    w1 = s.last_window
+    assert w1 is not None and w1["tokens_per_s"] > 0
+    # gauges are the instantaneous state at the boundary, not an average
+    assert w1["queue_depth"] == float(len(s.queue))
+    assert w1["live_slots"] == float(s.live_slots)
+    s.drain()
+    m1 = s.finish_run()
+    assert m1["completed"] == 4
+
+    # second run: window state must reset cleanly
+    for p in _prompts(2, seed=12):
+        s.submit(p)
+    s.begin_run(6)
+    assert s.last_window is None
+    s.step()
+    assert s.last_window["tokens_per_s"] > 0
+    s.drain()
+    assert s.finish_run()["completed"] == 2
