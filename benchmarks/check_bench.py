@@ -140,6 +140,28 @@ def check_online_tuning(expect_quick: Optional[bool] = None) -> None:
     assert v["candidate_location"] > v["baseline_location"], v
 
 
+def check_fault_tolerance(expect_quick: Optional[bool] = None) -> None:
+    d = _load("fault_tolerance", expect_quick)
+    tr = d["train"]
+    assert tr["kills"] >= 1 and tr["restarts"] == tr["kills"], tr
+    assert tr["overlap_identical"], "re-executed steps diverged from first run"
+    assert tr["bit_identical"], (
+        "resumed loss trajectory is not bit-identical to uninterrupted")
+    assert len(tr["recovery_s"]) == tr["kills"], tr["recovery_s"]
+    assert all(s > 0 for s in tr["recovery_s"]), tr["recovery_s"]
+    assert d["torn"]["fell_back"], (
+        f"corrupt newest checkpoint did not fall back: {d['torn']}")
+    ca = d["campaign"]
+    assert ca["completed_before_kill"] >= 1, ca
+    assert ca["replayed_completed_evals"] == 0, (
+        f"resume re-measured evals of completed cells: {ca}")
+    assert ca["cells_resumed_exactly"] >= 1, ca
+    v = d["ckpt_overhead"]["verdict"]
+    assert v["verdict"] == "improved", (
+        f"async checkpointing did not beat blocking on blocked time: {v}")
+    assert v["candidate_location"] < v["baseline_location"], v
+
+
 CHECKS = {
     "optimizer_throughput": check_optimizer_throughput,
     "configstore_resolve": check_configstore_resolve,
@@ -149,6 +171,7 @@ CHECKS = {
     "compile_cold_warm": check_compile_cold_warm,
     "serve_scenarios": check_serve_scenarios,
     "online_tuning": check_online_tuning,
+    "fault_tolerance": check_fault_tolerance,
 }
 
 

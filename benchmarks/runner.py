@@ -84,6 +84,12 @@ def _online_tuning(quick: bool, seed: int) -> List[BenchRecord]:
     return m.bench(quick=quick, seed=seed)
 
 
+@register("fault_tolerance")
+def _fault_tolerance(quick: bool, seed: int) -> List[BenchRecord]:
+    from . import fault_tolerance as m
+    return m.bench(quick=quick, seed=seed)
+
+
 # Post-run smoke assertions (shared with test.sh --bench-smoke and CI):
 # benchmark name -> check_bench check name.
 SMOKE_CHECKS = {
@@ -95,6 +101,7 @@ SMOKE_CHECKS = {
     "compile_cold_warm": "compile_cold_warm",
     "serve_scenarios": "serve_scenarios",
     "online_tuning": "online_tuning",
+    "fault_tolerance": "fault_tolerance",
 }
 
 

@@ -62,6 +62,13 @@ GRIDS: Dict[str, Dict[str, List[str]]] = {
     "serving": {
         "serve_batching": ["reduced_c128", "reduced_c512"],
     },
+    # Training-side components (ROADMAP item 5): the checkpoint cadence
+    # tradeoff and the input-pipeline overlap.  Signatures match what
+    # run_training resolves live: kb2048 IS the reduced model's state bucket.
+    "training": {
+        "train_checkpoint": ["kb2048"],
+        "data_pipeline": ["b4s128", "b8s256"],
+    },
     "demo": {
         "hashtable": ["n1024l2", "n2048l2", "n4096l4"],
         "spinlock": ["heavy2", "heavy8"],
@@ -73,6 +80,8 @@ _OBJECTIVES = {
     "rmsnorm_kernel": ("time_us", "min"),
     "ssd_kernel": ("time_us", "min"),
     "serve_batching": ("tokens_per_s", "max"),
+    "train_checkpoint": ("overhead_ms", "min"),
+    "data_pipeline": ("batch_ms", "min"),
     "hashtable": ("collisions", "min"),
     "spinlock": ("throughput_ops_s", "max"),
 }
@@ -193,6 +202,83 @@ def _measure_serve(cell: CampaignCell, settings: Dict[str, Any], reps: int) -> D
             ("tokens_per_s", "p50_latency_s", "queue_depth", "live_slots")}
 
 
+def _measure_train_checkpoint(cell: CampaignCell, settings: Dict[str, Any],
+                              reps: int) -> Dict[str, float]:
+    """Short real training run under the proposed checkpoint policy.
+
+    ``blocked_ms``: wall time the train loop spent inside save().
+    ``recovery_ms``: measured restore latency from the run's own checkpoints.
+    ``overhead_ms``: the tuned objective — blocked time plus the *expected*
+    recovery bill, P_fault × (restore + re-training the steps written since
+    the last save).  A huge interval minimizes blocked time but loses half an
+    interval of work per fault; a tiny one pays save cost every step — the
+    optimizer finds the crossover for this context."""
+    import tempfile
+    import time as _time
+
+    from repro.runtime.train_loop import run_training
+    from repro.runtime.checkpoint import restore_checkpoint
+    from repro.runtime.steps import init_train_state
+
+    del reps
+    p_fault = 0.05  # faults per step, pessimistic cluster assumption
+    n_steps = 8
+    params, cfg = _serve_model()
+    del params
+    with tempfile.TemporaryDirectory() as td:
+        out = run_training(cfg, n_steps=n_steps, global_batch=2, seq_len=32,
+                           ckpt_dir=td, ckpt_overrides=dict(settings),
+                           seed=cell.seed)
+        cc = out["ckpt_counters"]
+        blocked_ms = 1000.0 * float(cc["blocked_s"])
+        template = init_train_state(jax.random.PRNGKey(cell.seed), cfg)
+        t0 = _time.perf_counter()
+        restore_checkpoint(td, template)
+        restore_ms = 1000.0 * (_time.perf_counter() - t0)
+    step_ms = 1000.0 * float(np.median(
+        [h["step_time_s"] for h in out["history"]] or [0.0]))
+    every = int(settings["ckpt_every"])
+    recovery_ms = restore_ms + 0.5 * min(every, n_steps) * step_ms
+    overhead_ms = blocked_ms + p_fault * n_steps * recovery_ms
+    return {"blocked_ms": blocked_ms, "recovery_ms": recovery_ms,
+            "overhead_ms": overhead_ms}
+
+
+def _measure_data_pipeline(cell: CampaignCell, settings: Dict[str, Any],
+                           reps: int) -> Dict[str, float]:
+    """Consumer-side batch latency under the proposed prefetch settings.
+
+    The override routes through the store for exactly this workload — the
+    same signature ``PrefetchingBatcher`` computes from (batch, seq), so the
+    measurement exercises the true resolution path.  A small simulated
+    compute gap between fetches is what gives look-ahead something to
+    overlap with."""
+    import time as _time
+
+    from repro.data.pipeline import PackedBatcher, PrefetchingBatcher, SyntheticCorpus
+
+    del reps
+    f = _sig_fields(cell.workload)
+    gb, seq = int(f["b"]), int(f["s"])
+    store = configstore.default_store()
+    store.set_override(cell.component, cell.workload, dict(settings))
+    try:
+        pf = PrefetchingBatcher(PackedBatcher(
+            SyntheticCorpus(512, seed=cell.seed), gb, seq))
+        assert pf.prefetch_depth == int(settings["prefetch_depth"])
+        lat = []
+        for step in range(16):
+            t0 = _time.perf_counter()
+            pf.batch_at(step)
+            lat.append(1000.0 * (_time.perf_counter() - t0))
+            _time.sleep(0.002)  # the "train step" the pipeline hides behind
+        stall_ms = 1000.0 * float(pf.counters["stall_s"])
+        pf.close()
+    finally:
+        store.clear_override(cell.component, cell.workload)
+    return {"batch_ms": float(np.median(lat)), "stall_ms": stall_ms}
+
+
 def _measure_hashtable(cell: CampaignCell, settings: Dict[str, Any], reps: int) -> Dict[str, float]:
     from repro.core.smartcomponents import TunableHashTable, hashtable_workload
 
@@ -217,6 +303,8 @@ _MEASURES = {
     "rmsnorm_kernel": _measure_rmsnorm,
     "ssd_kernel": _measure_ssd,
     "serve_batching": _measure_serve,
+    "train_checkpoint": _measure_train_checkpoint,
+    "data_pipeline": _measure_data_pipeline,
     "hashtable": _measure_hashtable,
     "spinlock": _measure_spinlock,
 }
@@ -249,6 +337,10 @@ def main(argv: Optional[List[str]] = None) -> int:
 
     if args.grid == "serving":
         from repro.runtime import serve_loop as _serve  # noqa: F401 — registers serve_batching
+    if args.grid == "training":
+        # registers train_checkpoint + data_pipeline
+        from repro.data import pipeline as _pipe  # noqa: F401
+        from repro.runtime import checkpoint as _ckpt  # noqa: F401
     for s in args.set:
         apply_overrides(parse_override(s))
     budget = max(4, args.budget // 2) if args.quick else args.budget

@@ -1,13 +1,28 @@
-"""Checkpointing: atomic, async, resumable, reshard-on-restore.
+"""Checkpointing: atomic, durable, async, resumable, reshard-on-restore.
 
 Layout:  <root>/step_<k>/arrays.npz + manifest.json, written to a ``.tmp``
 sibling then ``os.replace``d — a reader never sees a partial checkpoint.
+Durability is real, not claimed: every file and the directory entries are
+fsynced before the rename is allowed to stand, and replacing an existing
+step dir goes through a rename-aside (``.old_step_*``) so a crash at any
+instruction boundary leaves either the new or the old checkpoint intact,
+never neither.  Orphaned staging dirs from dead writers are swept by GC
+(pid liveness via ``os.kill(pid, 0)``).
+
 ``AsyncCheckpointer`` snapshots device arrays to host synchronously (cheap)
 and does the serialization/fsync on a worker thread, so the train loop
 blocks only for the host copy (the standard TPU framework pattern).
 
 Restore takes an optional sharding tree: arrays are ``device_put`` with the
 *target* topology's shardings — this is the elastic-rescale entry point.
+When no explicit step is requested, restore falls back step-by-step past
+torn or corrupt checkpoints to the newest loadable one.
+
+The checkpoint policy is a smart component (``train_checkpoint``): interval,
+async-vs-blocking mode, and retention are declared tunables resolved
+per-context, because the right interval is a *tradeoff* (write overhead vs.
+recovery cost) that depends on state size and fault rate — see
+benchmarks/fault_tolerance.py for the measurement that tunes it.
 """
 from __future__ import annotations
 
@@ -22,9 +37,36 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step", "AsyncCheckpointer"]
+from ..core.configstore import bucket_pow2
+from ..core.registry import MetricSpec, tunable_component
+from ..core.tunable import Categorical, Int
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step", "sweep_stale",
+           "AsyncCheckpointer", "ckpt_settings", "workload_signature"]
 
 _SEP = "/"
+
+
+@tunable_component(
+    name="train_checkpoint",
+    tunables=(
+        Int("ckpt_every", default=50, low=1, high=1000, log=True),
+        Categorical("mode", default="async", choices=("async", "blocking")),
+        Int("max_to_keep", default=3, low=1, high=16, log=True),
+    ),
+    metrics=(MetricSpec("blocked_ms", "d"), MetricSpec("recovery_ms", "d"),
+             MetricSpec("overhead_ms", "d")),
+)
+class CheckpointSettings:
+    pass
+
+
+ckpt_settings = CheckpointSettings()
+
+
+def workload_signature(state_kb: int) -> str:
+    """Checkpoint cost scales with state size; bucket it like serve capacity."""
+    return f"kb{bucket_pow2(max(1, int(state_kb)))}"
 
 
 def _flatten(tree: Any) -> Dict[str, np.ndarray]:
@@ -47,7 +89,78 @@ def _unflatten_key(flat: Dict[str, np.ndarray], key: str) -> np.ndarray:
     return flat[key + "::bf16"].view(ml_dtypes.bfloat16)
 
 
-def save_checkpoint(root: str, step: int, tree: Any, extra: Optional[Dict] = None) -> Path:
+def _fsync_path(p: Path) -> None:
+    fd = os.open(p, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _pid_alive(pid: int) -> bool:
+    try:
+        os.kill(pid, 0)
+    except OSError:
+        return False
+    return True
+
+
+def _staging_pid(name: str) -> Optional[int]:
+    # ".tmp_step_00000012_4242" / ".old_step_00000012_4242" -> 4242
+    try:
+        return int(name.rsplit("_", 1)[1])
+    except (IndexError, ValueError):
+        return None
+
+
+def _staging_step(name: str) -> Optional[int]:
+    try:
+        return int(name.split("_")[2])
+    except (IndexError, ValueError):
+        return None
+
+
+def _repair(root_p: Path) -> None:
+    """Promote ``.old_step_*`` dirs orphaned by a writer that died between
+    rename-aside and commit: the previously-good checkpoint comes back as
+    ``step_<k>`` instead of being lost."""
+    if not root_p.exists():
+        return
+    for d in root_p.glob(".old_step_*"):
+        pid = _staging_pid(d.name)
+        step = _staging_step(d.name)
+        if step is None or (pid is not None and pid != os.getpid() and _pid_alive(pid)):
+            continue
+        if pid is not None and pid == os.getpid():
+            continue  # in-flight rename-aside by THIS process
+        final = root_p / f"step_{step:08d}"
+        if not final.exists():
+            try:
+                os.replace(d, final)
+            except OSError:
+                pass
+
+
+def sweep_stale(root: str) -> int:
+    """Remove staging dirs (``.tmp_step_*``, ``.old_step_*``) left by dead
+    writers.  Orphaned ``.old`` dirs are repaired (promoted) first.  Returns
+    the number of dirs removed."""
+    root_p = Path(root)
+    if not root_p.exists():
+        return 0
+    _repair(root_p)
+    removed = 0
+    for d in list(root_p.glob(".tmp_step_*")) + list(root_p.glob(".old_step_*")):
+        pid = _staging_pid(d.name)
+        if pid is not None and (pid == os.getpid() or _pid_alive(pid)):
+            continue
+        shutil.rmtree(d, ignore_errors=True)
+        removed += 1
+    return removed
+
+
+def save_checkpoint(root: str, step: int, tree: Any, extra: Optional[Dict] = None,
+                    durable: bool = True) -> Path:
     root_p = Path(root)
     final = root_p / f"step_{step:08d}"
     tmp = root_p / f".tmp_step_{step:08d}_{os.getpid()}"
@@ -63,9 +176,24 @@ def save_checkpoint(root: str, step: int, tree: Any, extra: Optional[Dict] = Non
         "extra": extra or {},
     }
     (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    if durable:
+        # contents must be on disk BEFORE the rename makes them visible,
+        # else a crash can surface a fully-named but empty checkpoint
+        _fsync_path(tmp / "arrays.npz")
+        _fsync_path(tmp / "manifest.json")
+        _fsync_path(tmp)
+    old = root_p / f".old_step_{step:08d}_{os.getpid()}"
     if final.exists():
-        shutil.rmtree(final)
+        # rename ASIDE, never rmtree-then-replace: a crash in that window
+        # would leave NO checkpoint for this step
+        if old.exists():
+            shutil.rmtree(old)
+        os.replace(final, old)
     os.replace(tmp, final)
+    if durable:
+        _fsync_path(root_p)  # persist the directory entry itself
+    if old.exists():
+        shutil.rmtree(old, ignore_errors=True)
     return final
 
 
@@ -73,18 +201,14 @@ def latest_step(root: str) -> Optional[int]:
     p = Path(root)
     if not p.exists():
         return None
+    _repair(p)
     steps = sorted(int(d.name.split("_")[1]) for d in p.iterdir()
                    if d.is_dir() and d.name.startswith("step_"))
     return steps[-1] if steps else None
 
 
-def restore_checkpoint(root: str, template: Any, step: Optional[int] = None,
-                       shardings: Optional[Any] = None) -> Tuple[Any, Dict]:
-    """Restore into the structure of ``template``; optionally reshard leaves
-    onto ``shardings`` (same treedef) — used for elastic topology changes."""
-    step = step if step is not None else latest_step(root)
-    if step is None:
-        raise FileNotFoundError(f"no checkpoint under {root}")
+def _load_step(root: str, step: int, template: Any,
+               shardings: Optional[Any]) -> Tuple[Any, Dict]:
     d = Path(root) / f"step_{step:08d}"
     manifest = json.loads((d / "manifest.json").read_text())
     with np.load(d / "arrays.npz") as z:
@@ -103,17 +227,51 @@ def restore_checkpoint(root: str, template: Any, step: Optional[int] = None,
     return jax.tree_util.tree_unflatten(treedef, leaves), manifest
 
 
+def restore_checkpoint(root: str, template: Any, step: Optional[int] = None,
+                       shardings: Optional[Any] = None) -> Tuple[Any, Dict]:
+    """Restore into the structure of ``template``; optionally reshard leaves
+    onto ``shardings`` (same treedef) — used for elastic topology changes.
+
+    With ``step=None`` a torn or corrupt newest checkpoint is skipped and the
+    next-older step restored instead (chaos injection corrupts checkpoints on
+    purpose; restore must degrade, not die)."""
+    if step is not None:
+        return _load_step(root, step, template, shardings)
+    newest = latest_step(root)
+    if newest is None:
+        raise FileNotFoundError(f"no checkpoint under {root}")
+    p = Path(root)
+    candidates = sorted((int(d.name.split("_")[1]) for d in p.iterdir()
+                         if d.is_dir() and d.name.startswith("step_")), reverse=True)
+    last_err: Optional[BaseException] = None
+    for s in candidates:
+        try:
+            return _load_step(root, s, template, shardings)
+        except Exception as e:  # torn npz / truncated manifest / missing key
+            last_err = e
+    raise FileNotFoundError(
+        f"no loadable checkpoint under {root} "
+        f"(tried steps {candidates}): {last_err}") from last_err
+
+
 class AsyncCheckpointer:
-    """Non-blocking saves with bounded retention and crash-safe atomicity."""
+    """Non-blocking saves with bounded retention and crash-safe atomicity.
+
+    ``counters`` tracks the train-loop-visible cost: ``saves``, cumulative
+    ``blocked_s`` (time the caller spent inside :meth:`save`), and the stale
+    staging dirs swept — the raw material for the checkpoint-overhead metric.
+    """
 
     def __init__(self, root: str, max_to_keep: int = 3):
         self.root = root
         self.max_to_keep = max_to_keep
         self._thread: Optional[threading.Thread] = None
         self._err: Optional[BaseException] = None
+        self.counters: Dict[str, float] = {"saves": 0, "blocked_s": 0.0, "swept": 0}
 
     def save(self, step: int, tree: Any, extra: Optional[Dict] = None,
              blocking: bool = False) -> None:
+        t0 = time.perf_counter()
         self.wait()  # one in-flight save at a time
         # Snapshot with an owning COPY, not np.asarray: on the CPU backend
         # asarray can alias the device buffer zero-copy, and the train step
@@ -130,13 +288,18 @@ class AsyncCheckpointer:
 
         if blocking:
             work()
+            self.counters["saves"] += 1
+            self.counters["blocked_s"] += time.perf_counter() - t0
             self._raise()
         else:
             self._thread = threading.Thread(target=work, daemon=True)
             self._thread.start()
+            self.counters["saves"] += 1
+            self.counters["blocked_s"] += time.perf_counter() - t0
 
     def _gc(self) -> None:
         p = Path(self.root)
+        self.counters["swept"] += sweep_stale(self.root)
         steps = sorted(int(d.name.split("_")[1]) for d in p.iterdir()
                        if d.is_dir() and d.name.startswith("step_"))
         for s in steps[: -self.max_to_keep]:

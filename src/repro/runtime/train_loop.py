@@ -1,11 +1,19 @@
 """The training loop: data → step → telemetry → checkpoint → (MLOS agent).
 
 This is Figure 1 of the paper running over a JAX train job: the loop emits
-per-step telemetry (loss, step time, OS counters) to the MLOS channel; the
-side-car agent can retune class-a auto-parameters (e.g. ``lr_scale``)
-*live*, and class-b (structural) parameters between re-jits.  Checkpointing
-is async + atomic; on restart the loop resumes from the latest step with a
-deterministic data stream (PackedBatcher.batch_at is stateless).
+per-step telemetry (loss, step time) onto the MLOS channel (pass
+``channel=``), the side-car agent can retune class-a auto-parameters (e.g.
+``lr_scale``) *live*, and class-b (structural) parameters between re-jits.
+Checkpointing is async + atomic, with interval / mode / retention resolved
+from the ``train_checkpoint`` smart component; the data stream prefetches
+through the ``data_pipeline`` component.  On restart the loop resumes from
+the newest *loadable* step with a deterministic data stream
+(PackedBatcher.batch_at is stateless), skipping torn checkpoints.
+
+Fault wiring: per-step times feed a :class:`StragglerDetector` whose events
+(and any you inject via a shared detector) are dispatched to ``on_fault``;
+a :mod:`repro.runtime.chaos` injector hooks ``chaos.on_step`` at the top of
+every step to kill / suspend / corrupt / delay on schedule.
 """
 from __future__ import annotations
 
@@ -13,15 +21,44 @@ import time
 from typing import Any, Callable, Dict, Optional
 
 import jax
+import numpy as np
 
+from ..core.configstore import bucket_pow2
+from ..core.registry import MetricSpec, get_component, tunable_component
+from ..core.telemetry import TelemetryEmitter
 from ..core.tracking import Tracker
-from ..data.pipeline import PackedBatcher, SyntheticCorpus
+from ..core.tunable import Float
+from ..data.pipeline import PackedBatcher, PrefetchingBatcher, SyntheticCorpus
 from ..models.config import ModelConfig
-from .checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
-from .fault import StragglerDetector
+from .checkpoint import AsyncCheckpointer, ckpt_settings, latest_step, restore_checkpoint
+from .checkpoint import workload_signature as ckpt_workload_signature
+from .fault import FaultEvent, StragglerDetector
 from .steps import TrainHyper, init_train_state, jit_train_step
 
-__all__ = ["run_training"]
+__all__ = ["run_training", "train_settings", "workload_signature"]
+
+
+@tunable_component(
+    name="train_loop",
+    tunables=(
+        Float("lr_scale", default=1.0, low=0.0625, high=16.0, log=True),
+    ),
+    metrics=(MetricSpec("loss", "d"), MetricSpec("step_time_s", "d")),
+)
+class TrainLoopSettings:
+    pass
+
+
+train_settings = TrainLoopSettings()
+
+
+def workload_signature(global_batch: int, seq_len: int, d_model: int) -> str:
+    return (f"b{bucket_pow2(max(1, global_batch))}"
+            f"s{bucket_pow2(max(1, seq_len))}d{bucket_pow2(max(1, d_model))}")
+
+
+def _state_kb(state: Any) -> int:
+    return sum(int(np.asarray(l).nbytes) for l in jax.tree.leaves(state)) // 1024
 
 
 def run_training(
@@ -33,33 +70,67 @@ def run_training(
     hyper: Optional[TrainHyper] = None,
     microbatches: int = 1,
     ckpt_dir: Optional[str] = None,
-    ckpt_every: int = 50,
+    ckpt_every: Optional[int] = None,
     tracker: Optional[Tracker] = None,
     experiment: str = "train",
     on_step: Optional[Callable[[int, Dict[str, float]], None]] = None,
+    on_fault: Optional[Callable[[FaultEvent], None]] = None,
     lr_scale_source: Optional[Callable[[], float]] = None,
+    channel: Optional[Any] = None,
+    chaos: Optional[Any] = None,
+    straggler_detector: Optional[StragglerDetector] = None,
+    pipeline_overrides: Optional[Dict[str, Any]] = None,
+    ckpt_overrides: Optional[Dict[str, Any]] = None,
     seed: int = 0,
 ) -> Dict[str, Any]:
-    """Train cfg for n_steps on the synthetic pipeline; returns final state+history."""
+    """Train cfg for n_steps on the synthetic pipeline; returns final state+history.
+
+    ``ckpt_every=None`` resolves the interval (and async-vs-blocking mode and
+    retention) from the ``train_checkpoint`` component for this state-size
+    context; pass an int to pin it explicitly."""
     hyper = hyper or TrainHyper()
-    batcher = PackedBatcher(SyntheticCorpus(cfg.vocab_size, seed=seed),
-                            global_batch, seq_len)
+    batcher = PrefetchingBatcher(
+        PackedBatcher(SyntheticCorpus(cfg.vocab_size, seed=seed),
+                      global_batch, seq_len),
+        settings=pipeline_overrides)
     step_fn = jit_train_step(cfg, hyper, microbatches=microbatches)
 
     state = init_train_state(jax.random.PRNGKey(seed), cfg)
     start = 0
-    ckpt = AsyncCheckpointer(ckpt_dir) if ckpt_dir else None
-    if ckpt_dir and latest_step(ckpt_dir) is not None:
-        state, manifest = restore_checkpoint(ckpt_dir, state)
-        start = int(manifest["step"]) + 1
+    ckpt = None
+    blocking_save = False
+    if ckpt_dir:
+        cs = ckpt_settings.settings_for(ckpt_workload_signature(_state_kb(state)))
+        co = dict(ckpt_overrides or {})  # pinned values win, like serve's settings=
+        if ckpt_every is None:
+            ckpt_every = int(co.get("ckpt_every", cs["ckpt_every"]))
+        blocking_save = str(co.get("mode", cs["mode"])) == "blocking"
+        ckpt = AsyncCheckpointer(ckpt_dir,
+                                 max_to_keep=int(co.get("max_to_keep", cs["max_to_keep"])))
+        if latest_step(ckpt_dir) is not None:
+            try:
+                state, manifest = restore_checkpoint(ckpt_dir, state)
+                start = int(manifest["step"]) + 1
+            except FileNotFoundError:
+                start = 0  # every checkpoint torn: cold start beats crashing
+    elif ckpt_every is None:
+        ckpt_every = 50
+
+    tl = train_settings.settings_for(workload_signature(global_batch, seq_len, cfg.d_model))
+    emitter = (TelemetryEmitter(get_component("train_loop"), channel)
+               if channel is not None else None)
 
     run = tracker.start_run(experiment) if tracker else None
-    strag = StragglerDetector(n_hosts=1)
+    strag = straggler_detector or StragglerDetector(n_hosts=1)
     history = []
+    last_saved: Optional[int] = None
     t_prev = time.perf_counter()
     for step in range(start, n_steps):
+        if chaos is not None:
+            chaos.on_step(step, ckpt_dir=ckpt_dir)
         batch = jax.tree.map(jax.numpy.asarray, batcher.batch_at(step))
-        lr_scale = float(lr_scale_source()) if lr_scale_source else 1.0
+        lr_scale = (float(lr_scale_source()) if lr_scale_source
+                    else float(tl["lr_scale"]))
         state, metrics = step_fn(state, batch, lr_scale)
         metrics = {k: float(v) for k, v in metrics.items()}
         t_now = time.perf_counter()
@@ -67,14 +138,31 @@ def run_training(
         t_prev = t_now
         strag.record(0, step, metrics["step_time_s"])
         history.append(metrics)
+        if emitter is not None:
+            emitter.emit(metrics)
         if run:
             run.log_metrics(metrics, step=step)
         if on_step:
             on_step(step, metrics)
+        if on_fault and (step + 1) % 8 == 0:
+            for ev in strag.stragglers():
+                on_fault(ev)
         if ckpt and (step + 1) % ckpt_every == 0:
-            ckpt.save(step, state)
-    if ckpt:
+            ckpt.save(step, state, blocking=blocking_save)
+            last_saved = step
+    # Save the final step only if this run actually trained past the last
+    # save: the old unconditional save double-wrote a just-checkpointed step
+    # and — worse — clobbered step n_steps-1 with a RESTORED state when a
+    # resume started at or beyond n_steps.
+    if ckpt and start < n_steps and last_saved != n_steps - 1:
         ckpt.save(n_steps - 1, state, blocking=True)
+    if ckpt:
+        ckpt.wait()
+    batcher.close()
     if run:
         run.end()
-    return {"state": state, "history": history}
+    out = {"state": state, "history": history}
+    if ckpt:
+        out["ckpt_counters"] = dict(ckpt.counters)
+    out["data_counters"] = dict(batcher.counters)
+    return out

@@ -21,8 +21,9 @@
 #                                        benchmarks/optimizer_throughput.py --quick,
 #                                        benchmarks/configstore_roundtrip.py --quick,
 #                                        benchmarks/compile_cold_warm.py --quick,
-#                                        benchmarks/serve_scenarios.py --quick
-#                                        and benchmarks/online_tuning.py --quick
+#                                        benchmarks/serve_scenarios.py --quick,
+#                                        benchmarks/online_tuning.py --quick
+#                                        and benchmarks/fault_tolerance.py --quick
 #                                        and asserts each wrote valid JSON
 #                                        (benchmarks/check_bench.py), so the
 #                                        tracked perf trajectory can't rot silently.
@@ -66,6 +67,11 @@ if [[ "${1:-}" == "--bench-smoke" ]]; then
   # beat the frozen config on the post-shift mix (stats.compare `improved`).
   python -m benchmarks.online_tuning --quick
   python -m benchmarks.check_bench online_tuning --expect-quick
+  # Fault-injected training: SIGKILL'd runs must resume bit-identically with
+  # zero re-measured campaign evals, torn checkpoints must fall back, and
+  # async checkpointing must beat blocking (stats.compare `improved`).
+  python -m benchmarks.fault_tolerance --quick
+  python -m benchmarks.check_bench fault_tolerance --expect-quick
   exit 0
 fi
 

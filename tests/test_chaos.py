@@ -1,0 +1,175 @@
+"""Chaos harness unit tests: plans, fire-once journal, damage, respawn.
+
+The injector is what the fault-tolerance benchmark and the training campaign
+lean on, so its invariants get their own suite: plans are pure functions of
+the seed, a fault journaled before execution never fires twice (even across
+injector re-construction, i.e. a respawned process), checkpoint damage hits
+the file the restore path will actually read, and the supervisor absorbs
+scheduled deaths but refuses a crash loop.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+import numpy as np
+import pytest
+
+from repro.runtime.chaos import (
+    SCENARIOS,
+    ChaosInjector,
+    Fault,
+    corrupt_checkpoint,
+    kills,
+    mixed,
+    plan_from_json,
+    plan_to_json,
+    respawn,
+)
+from repro.runtime.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+
+# ------------------------------------------------------------------- plans
+def test_generators_are_seeded_and_sorted():
+    for name, gen in SCENARIOS.items():
+        a, b = gen(11, n_steps=32), gen(11, n_steps=32)
+        assert a == b, name  # same seed, same plan — replayable by contract
+        assert a != gen(12, n_steps=32), name
+        assert [f.at_step for f in a] == sorted(f.at_step for f in a), name
+        assert all(f.at_step >= 1 for f in a), name  # never step 0
+
+
+def test_kills_distinct_steps_and_clamped():
+    plan = kills(3, n_steps=64, n_kills=4)
+    steps = [f.at_step for f in plan]
+    assert len(set(steps)) == 4 and all(f.kind == "kill" for f in plan)
+    # more kills than steps available: clamped, not an error
+    tiny = kills(3, n_steps=3, n_kills=10)
+    assert len(tiny) <= 2 and all(1 <= f.at_step < 3 for f in tiny)
+
+
+def test_mixed_covers_every_kind_on_disjoint_steps():
+    plan = mixed(5, n_steps=64)
+    assert sorted(f.kind for f in plan) == sorted(
+        ("kill", "suspend", "corrupt_ckpt", "truncate_ckpt", "data_delay"))
+    assert len({f.at_step for f in plan}) == len(plan)
+
+
+def test_plan_json_roundtrip():
+    plan = mixed(9, n_steps=64)
+    back = plan_from_json(plan_to_json(plan))
+    assert back == plan
+    assert all(isinstance(f, Fault) for f in back)
+
+
+# --------------------------------------------------------- fire-once journal
+def test_fault_fires_once_within_a_process(tmp_path):
+    inj = ChaosInjector([Fault(2, "suspend", 0.0), Fault(2, "data_delay", 0.0)],
+                        journal=str(tmp_path / "j.jsonl"))
+    inj.on_step(1)
+    assert inj.fired == set()
+    inj.on_step(2)
+    assert len(inj.fired) == 2  # both step-2 faults, distinct ids
+    inj.on_step(2)  # a re-executed step must not re-fire
+    assert len(inj.fired) == 2
+    rows = [json.loads(line) for line in
+            (tmp_path / "j.jsonl").read_text().splitlines()]
+    assert len(rows) == 2 and all(r["step"] == 2 for r in rows)
+
+
+def test_journal_survives_injector_reconstruction(tmp_path):
+    """The respawned-process contract: a new injector over the same journal
+    skips already-fired faults — this is what stops a kill loop."""
+    j = str(tmp_path / "j.jsonl")
+    plan = [Fault(1, "suspend"), Fault(3, "suspend")]
+    first = ChaosInjector(plan, journal=j)
+    first.on_step(1)
+    reborn = ChaosInjector(plan, journal=j)  # same plan, fresh process
+    assert reborn.fired == first.fired
+    reborn.on_step(1)  # resume re-executes step 1: must be a no-op
+    assert reborn.fired == first.fired
+    reborn.on_step(3)
+    assert len(reborn.fired) == 2
+
+
+def test_no_journal_means_in_memory_only(tmp_path):
+    inj = ChaosInjector([Fault(1, "suspend")])
+    inj.on_step(1)
+    assert len(inj.fired) == 1
+    assert list(tmp_path.iterdir()) == []  # nothing written anywhere
+
+
+def test_unknown_fault_kind_raises():
+    inj = ChaosInjector([Fault(1, "meteor_strike")])
+    with pytest.raises(ValueError, match="meteor_strike"):
+        inj.on_step(1)
+
+
+# ------------------------------------------------------------- damage paths
+def _tree(v: float):
+    return {"w": np.full((16, 16), v, dtype=np.float32)}
+
+
+def test_corrupt_checkpoint_targets_newest_and_restore_falls_back(tmp_path):
+    root = str(tmp_path)
+    save_checkpoint(root, 1, _tree(1.0))
+    save_checkpoint(root, 2, _tree(2.0))
+    hit = corrupt_checkpoint(root)
+    assert hit is not None and "step_00000002" in str(hit)
+    state, manifest = restore_checkpoint(root, _tree(0.0))
+    assert manifest["step"] == 1  # newest is torn; fallback is transparent
+
+
+def test_corrupt_checkpoint_explicit_step_and_truncate(tmp_path):
+    root = str(tmp_path)
+    save_checkpoint(root, 1, _tree(1.0))
+    save_checkpoint(root, 2, _tree(2.0))
+    npz = corrupt_checkpoint(root, step=1, truncate=True)
+    assert npz is not None and "step_00000001" in str(npz)
+    assert npz.stat().st_size > 0  # torn, not deleted
+    # newest untouched: restore still succeeds at step 2
+    state, manifest = restore_checkpoint(root, _tree(0.0))
+    assert manifest["step"] == 2
+
+
+def test_corrupt_checkpoint_nothing_to_damage(tmp_path):
+    assert corrupt_checkpoint(str(tmp_path)) is None
+    assert latest_step(str(tmp_path)) is None
+
+
+def test_injector_routes_damage_to_ckpt_dir(tmp_path):
+    root = str(tmp_path / "ck")
+    save_checkpoint(root, 0, _tree(3.0))
+    inj = ChaosInjector([Fault(4, "corrupt_ckpt")])
+    inj.on_step(4, ckpt_dir=root)
+    with pytest.raises(Exception):
+        restore_checkpoint(root, _tree(0.0), step=0)
+    # without a ckpt_dir the same fault is a structured no-op, not a crash
+    ChaosInjector([Fault(4, "truncate_ckpt")]).on_step(4, ckpt_dir=None)
+
+
+# --------------------------------------------------------------- supervisor
+def test_respawn_counts_scheduled_deaths(tmp_path):
+    """Child SIGKILLs itself until a marker file accumulates 2 lines; the
+    supervisor must report exactly 2 restarts and a final clean exit."""
+    marker = tmp_path / "deaths"
+    prog = (
+        "import os, signal, sys\n"
+        f"p = {str(marker)!r}\n"
+        "n = len(open(p).readlines()) if os.path.exists(p) else 0\n"
+        "if n < 2:\n"
+        "    with open(p, 'a') as f:\n"
+        "        f.write('x\\n')\n"
+        "        f.flush()\n"
+        "        os.fsync(f.fileno())\n"
+        "    os.kill(os.getpid(), signal.SIGKILL)\n"
+        "sys.exit(0)\n")
+    restarts = respawn([sys.executable, "-c", prog], max_restarts=4)
+    assert restarts == 2
+    assert marker.read_text().count("x") == 2
+
+
+def test_respawn_refuses_a_crash_loop():
+    with pytest.raises(RuntimeError, match="giving up"):
+        respawn([sys.executable, "-c", "import sys; sys.exit(3)"],
+                max_restarts=1)

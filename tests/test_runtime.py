@@ -1,17 +1,25 @@
 """Runtime substrate: checkpoint atomicity/resume, fault policy, elastic replan,
-data pipeline determinism, loss-decrease integration."""
+data pipeline determinism, loss-decrease integration, fault injection."""
+
+import json
+import os
+import sys
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.data.pipeline import PackedBatcher, SyntheticCorpus
+from repro.data.pipeline import PackedBatcher, PrefetchingBatcher, SyntheticCorpus
 from repro.runtime.checkpoint import (AsyncCheckpointer, latest_step,
-                                      restore_checkpoint, save_checkpoint)
+                                      restore_checkpoint, save_checkpoint,
+                                      sweep_stale)
+from repro.runtime.chaos import corrupt_checkpoint
 from repro.runtime.elastic import usable_factorization
 from repro.runtime.fault import HeartbeatMonitor, RestartPolicy, StragglerDetector
 from repro.runtime.train_loop import run_training
+
+DEAD_PID = 2 ** 22 + 12345  # above any default pid_max: os.kill(pid, 0) fails
 
 
 # ------------------------------------------------------------------ checkpoint
@@ -51,6 +59,70 @@ def test_restore_resharded_dtype_cast(tmp_path):
     assert restored["w"].dtype == jnp.bfloat16
 
 
+def test_checkpoint_replace_over_existing(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"w": jnp.zeros((4,))})
+    save_checkpoint(str(tmp_path), 1, {"w": jnp.full((4,), 9.0)})
+    restored, _ = restore_checkpoint(str(tmp_path), {"w": jnp.zeros((4,))})
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.full((4,), 9.0))
+    # rename-aside leftovers are cleaned up on the happy path
+    assert [p.name for p in tmp_path.iterdir()] == ["step_00000001"]
+
+
+def test_checkpoint_crash_between_rename_aside_and_commit(tmp_path):
+    # planted failure for the old rmtree→replace window: the writer died
+    # after moving the good checkpoint aside but before committing the new
+    # one — the step must NOT be lost
+    tree = {"w": jnp.arange(4.0)}
+    save_checkpoint(str(tmp_path), 2, tree)
+    os.replace(tmp_path / "step_00000002",
+               tmp_path / f".old_step_00000002_{DEAD_PID}")
+    assert latest_step(str(tmp_path)) == 2  # repaired from the aside copy
+    restored, manifest = restore_checkpoint(str(tmp_path), tree)
+    assert manifest["step"] == 2
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.arange(4.0))
+
+
+def test_stale_tmp_dirs_from_dead_writers_swept(tmp_path):
+    (tmp_path / f".tmp_step_00000005_{DEAD_PID}").mkdir(parents=True)
+    mine = tmp_path / f".tmp_step_00000006_{os.getpid()}"
+    mine.mkdir(parents=True)
+    assert sweep_stale(str(tmp_path)) == 1
+    assert mine.exists()  # a LIVE writer's staging dir is never touched
+    ck = AsyncCheckpointer(str(tmp_path), max_to_keep=2)
+    (tmp_path / f".tmp_step_00000007_{DEAD_PID}").mkdir(parents=True)
+    ck.save(0, {"w": jnp.zeros((2,))}, blocking=True)  # _gc sweeps too
+    names = {p.name for p in tmp_path.iterdir()}
+    assert f".tmp_step_00000007_{DEAD_PID}" not in names
+
+
+def test_restore_falls_back_past_corrupt_newest(tmp_path):
+    tree = {"w": jnp.ones((4,))}
+    save_checkpoint(str(tmp_path), 1, {"w": jnp.full((4,), 1.0)})
+    save_checkpoint(str(tmp_path), 2, {"w": jnp.full((4,), 2.0)})
+    corrupt_checkpoint(str(tmp_path))                      # newest = 2
+    restored, manifest = restore_checkpoint(str(tmp_path), tree)
+    assert manifest["step"] == 1
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.full((4,), 1.0))
+    # truncation (torn write) degrades the same way
+    save_checkpoint(str(tmp_path), 3, {"w": jnp.full((4,), 3.0)})
+    corrupt_checkpoint(str(tmp_path), truncate=True)       # newest = 3
+    _, manifest = restore_checkpoint(str(tmp_path), tree)
+    assert manifest["step"] == 1
+    # an explicitly requested corrupt step still raises
+    with pytest.raises(Exception):
+        restore_checkpoint(str(tmp_path), tree, step=3)
+
+
+def test_async_checkpointer_error_surfaces_on_wait(tmp_path):
+    root = tmp_path / "not_a_dir"
+    root.write_text("a file where the checkpoint root should be")
+    ck = AsyncCheckpointer(str(root))
+    ck.save(0, {"w": jnp.zeros((2,))})  # worker hits the bad root
+    with pytest.raises(OSError):
+        ck.wait()
+    ck.wait()  # error is raised once, not latched forever
+
+
 # ----------------------------------------------------------------------- fault
 def test_heartbeat_detects_dead_and_recovery():
     hb = HeartbeatMonitor(n_hosts=3, timeout_s=10.0)
@@ -83,6 +155,42 @@ def test_restart_policy_escalation():
     assert rp.next_action(spare_hosts=1)["action"] == "abort"
 
 
+def test_heartbeat_flags_host_that_never_beat():
+    # planted failure: a host that wedges BEFORE its first heartbeat used to
+    # be invisible (check() skipped never-seen hosts)
+    hb = HeartbeatMonitor(n_hosts=2, timeout_s=10.0, now=0.0)
+    hb.beat(0, now=8.0)
+    events = hb.check(now=11.0)
+    assert [e.host for e in events if e.kind == "dead"] == [1]
+
+
+def test_straggler_recovered_event():
+    sd = StragglerDetector(n_hosts=2, factor=1.5, min_steps=4)
+    for step in range(8):
+        sd.record(0, step, 1.0)
+        sd.record(1, step, 4.0)
+    assert [(e.kind, e.host) for e in sd.stragglers()] == [("straggler", 1)]
+    for step in range(8, 8 + 16):  # a full window of healthy steps
+        sd.record(0, step, 1.0)
+        sd.record(1, step, 1.0)
+    kinds = [(e.kind, e.host) for e in sd.stragglers()]
+    assert ("recovered", 1) in kinds
+    assert all(k != "straggler" for k, _ in kinds)
+
+
+def test_restart_budget_decays_after_healthy_interval():
+    # planted failure: the budget never decayed, so a weeks-long job aborted
+    # on its Nth TRANSIENT fault no matter how far apart the faults were
+    rp = RestartPolicy(max_restarts=2, decay_after_s=100.0)
+    assert rp.next_action(1, now=0.0)["action"] == "restart_with_spare"
+    assert rp.next_action(1, now=1.0)["action"] == "restart_with_spare"
+    assert rp.next_action(1, now=2.0)["action"] == "abort"  # crash loop: abort
+    # 250s healthy forgives 2 restarts: the next transient fault restarts
+    a = rp.next_action(1, now=252.0)
+    assert a["action"] == "restart_with_spare"
+    assert a["backoff_s"] == rp.base_backoff_s  # backoff reset with the budget
+
+
 # --------------------------------------------------------------------- elastic
 @pytest.mark.parametrize("n,prefer,expect", [
     (512, 16, (32, 16)), (256, 16, (16, 16)), (240, 16, (15, 16)),
@@ -112,6 +220,22 @@ def test_batcher_host_slicing():
     np.testing.assert_array_equal(np.concatenate([lo["tokens"], hi["tokens"]]), full["tokens"])
 
 
+def test_prefetching_batcher_bit_identical():
+    c = SyntheticCorpus(vocab_size=500, seed=1)
+    pb = PackedBatcher(c, global_batch=4, seq_len=32)
+    pf = PrefetchingBatcher(PackedBatcher(c, global_batch=4, seq_len=32),
+                            settings={"prefetch_depth": 3, "pack_workers": 3})
+    try:
+        for step in (0, 1, 2, 7, 3):  # sequential, ahead, and backwards (resume)
+            want = pb.batch_at(step)
+            got = pf.batch_at(step)
+            np.testing.assert_array_equal(got["tokens"], want["tokens"])
+            np.testing.assert_array_equal(got["labels"], want["labels"])
+    finally:
+        pf.close()
+    assert pf.counters["hits"] + pf.counters["misses"] == 5
+
+
 def test_labels_are_next_token_within_doc():
     c = SyntheticCorpus(vocab_size=100, seed=0)
     b = PackedBatcher(c, 1, 128)
@@ -137,3 +261,102 @@ def test_training_decreases_loss_and_resumes(tmp_path):
                         ckpt_dir=str(tmp_path / "ck"), ckpt_every=4, seed=0)
     assert len(out2["history"]) == 2  # steps 8..9 only
     assert int(out2["state"]["step"]) == 10
+
+
+def test_final_save_not_duplicated_and_no_stale_clobber(tmp_path):
+    # planted failure for the unconditional exit save: (a) a step that was
+    # just checkpointed in-loop was written twice; (b) a resume starting AT
+    # or past n_steps clobbered step n_steps-1 with the restored state
+    cfg = get_config("olmo-1b").reduced().validate()
+    ck = str(tmp_path / "ck")
+    out = run_training(cfg, n_steps=4, global_batch=2, seq_len=16,
+                       ckpt_dir=ck, ckpt_every=4, seed=0)
+    assert out["ckpt_counters"]["saves"] == 1  # step 3 saved once, not twice
+    manifest = (tmp_path / "ck" / "step_00000003" / "manifest.json")
+    before = manifest.stat().st_mtime_ns
+    out2 = run_training(cfg, n_steps=4, global_batch=2, seq_len=16,
+                        ckpt_dir=ck, ckpt_every=4, seed=0)
+    assert out2["history"] == []  # start=4 >= n_steps: nothing to train
+    assert out2["ckpt_counters"]["saves"] == 0  # and nothing re-written
+    assert manifest.stat().st_mtime_ns == before
+
+
+def test_train_loop_telemetry_and_fault_wiring(tmp_path):
+    from repro.core.channel import MlosChannel
+    from repro.core.codegen import unpack_telemetry
+    from repro.core.registry import get_component
+    from repro.runtime.fault import FaultEvent
+
+    cfg = get_config("olmo-1b").reduced().validate()
+    chan = MlosChannel.create(capacity=1 << 16)
+    try:
+        # a shared detector pre-loaded with a fleet where host 1 lags: the
+        # loop's own step recordings land on host 0, and the periodic
+        # stragglers() sweep must dispatch the events to on_fault
+        sd = StragglerDetector(n_hosts=2, factor=1.5, min_steps=4)
+        for step in range(8):
+            sd.record(1, step, 60.0)
+        faults = []
+        out = run_training(cfg, n_steps=8, global_batch=2, seq_len=16,
+                           channel=chan, straggler_detector=sd,
+                           on_fault=faults.append, seed=0)
+        meta = get_component("train_loop")
+        rows = []
+        while True:
+            payload = chan.telemetry.pop()
+            if payload is None:
+                break
+            rows.append(unpack_telemetry(meta, payload))
+        assert len(rows) == 8  # one packed record per step reached the channel
+        losses = [h["loss"] for h in out["history"]]
+        assert [r["loss"] for r in rows] == pytest.approx(losses)
+        assert any(e.kind == "straggler" and e.host == 1 for e in faults)
+        assert all(isinstance(e, FaultEvent) for e in faults)
+    finally:
+        chan.close()
+
+
+@pytest.mark.slow
+def test_kill_between_checkpoints_resumes_bit_identical(tmp_path):
+    """SIGKILL mid-run (chaos), respawn, and the merged loss trajectory is
+    bit-identical to an uninterrupted run — PackedBatcher.batch_at is
+    stateless, so the resumed stream has zero drift."""
+    from repro.runtime.chaos import respawn
+
+    child = tmp_path / "child.py"
+    child.write_text(
+        "import json, sys\n"
+        "from repro.configs import get_config\n"
+        "from repro.runtime.chaos import ChaosInjector, Fault\n"
+        "from repro.runtime.train_loop import run_training\n"
+        "d, mode = sys.argv[1], sys.argv[2]\n"
+        "chaos = (ChaosInjector([Fault(5, 'kill')], journal=d + '/chaos.jsonl')\n"
+        "         if mode == 'kill' else None)\n"
+        "cfg = get_config('olmo-1b').reduced().validate()\n"
+        "# per-step write + flush: SIGKILL loses process buffers, not the\n"
+        "# OS page cache, so flushed lines from before the kill survive\n"
+        "f = open(d + '/losses_' + mode + '.jsonl', 'a')\n"
+        "def log(s, m):\n"
+        "    f.write(json.dumps({'step': s, 'loss': m['loss']}) + '\\n')\n"
+        "    f.flush()\n"
+        "run_training(cfg, n_steps=8, global_batch=2, seq_len=16,\n"
+        "             ckpt_dir=d + '/ck_' + mode, ckpt_every=2, chaos=chaos,\n"
+        "             on_step=log, seed=0)\n"
+        "f.close()\n")
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ, PYTHONPATH=os.path.join(root, "src"))
+    restarts = respawn([sys.executable, str(child), str(tmp_path), "kill"],
+                       max_restarts=2, env=env)
+    assert restarts == 1  # exactly the one scheduled kill
+    respawn([sys.executable, str(child), str(tmp_path), "ref"],
+            max_restarts=0, env=env)
+    ref, killed = {}, {}
+    for line in (tmp_path / "losses_ref.jsonl").read_text().splitlines():
+        r = json.loads(line)
+        ref[r["step"]] = r["loss"]
+    for line in (tmp_path / "losses_kill.jsonl").read_text().splitlines():
+        r = json.loads(line)
+        if r["step"] in killed:  # re-executed after resume: must not diverge
+            assert killed[r["step"]] == r["loss"]
+        killed[r["step"]] = r["loss"]
+    assert killed == ref  # bit-identical, dict equality is exact float equality
